@@ -1,0 +1,72 @@
+"""Assemble the §Roofline table from dry-run artifacts (benchmarks/results/
+dryrun/*.json) — per (arch x shape x mesh): three terms, dominant
+bottleneck, useful-flops ratio, roofline fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def build_table(tag: str = "") -> Dict:
+    rows: List[dict] = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        if not d.get("ok"):
+            rows.append({"arch": d.get("arch"), "shape": d.get("shape"),
+                         "mesh": d.get("mesh"), "ok": False,
+                         "error": d.get("error")})
+            continue
+        t = d["terms"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "recipe": d.get("recipe", ""),
+            "ok": True,
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "useful_flops_ratio": t["useful_flops_ratio"],
+            "roofline_fraction": t["roofline_fraction"],
+            "flops_per_device": d["flops_per_device"],
+            "bytes_per_device": d["bytes_per_device"],
+            "coll_total_bytes": d["coll_bytes"].get("total", 0.0),
+            "model_flops": d["model_flops"],
+            "arg_gb": d.get("arg_bytes", 0) / 1e9,
+            "temp_gb": d.get("temp_bytes", 0) / 1e9,
+            "compile_s": d.get("compile_seconds", 0.0),
+        })
+    return {"rows": rows}
+
+
+def markdown(tag: str = "", mesh: str = "pod") -> str:
+    table = build_table(tag)
+    lines = [
+        "| arch | shape | recipe | compute_s | memory_s | coll_s | dominant "
+        "| useful | roofline | mem/dev (arg+temp GB) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in table["rows"]:
+        if not r.get("ok") or r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['recipe']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['arg_gb']:.1f}+{r['temp_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(markdown(*(sys.argv[1:])))

@@ -1,0 +1,274 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the full results
+(means, stds, speedups, Z-test P-values) to benchmarks/results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--trials 30] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# Adapted H0 thresholds for the paper's Table II hypothesis test
+# (null: speedup <= H0). The paper's absolute H0s (100 / 105000 / 20 / 0.7)
+# embed docker-daemon and network-install costs that do not exist here;
+# these test the same ORDERING claims on our measured regime.
+H0 = {"s1_python_tiny": 1.5, "s2_python_conda": 50.0,
+      "s3_java_precompiled": 1.0, "s4_java_compile_inside": 0.7}
+
+
+def z_test_p(speedups: np.ndarray, h0: float) -> float:
+    """P(observed | mu <= h0) one-sided Z (paper eq. 2)."""
+    n = len(speedups)
+    mu = float(speedups.mean())
+    s = float(speedups.std(ddof=1)) or 1e-12
+    z = (mu - h0) / (s / math.sqrt(n))
+    return 0.5 * math.erfc(z / math.sqrt(2))
+
+
+def bench_scenarios(trials: int, chunk_bytes: int = 1 << 18) -> dict:
+    """Fig. 5 (rebuild time mean±std), Fig. 6 (times faster), Table II."""
+    from .scenarios import SCENARIOS, run_scenario
+    out = {}
+    root = tempfile.mkdtemp(prefix="lc_bench_")
+    try:
+        for mk in SCENARIOS:
+            sc = mk(chunk_bytes)
+            base, inj = run_scenario(sc, root, trials, chunk_bytes)
+            speed = base / inj
+            out[sc.name] = {
+                "baseline_mean_s": float(base.mean()),
+                "baseline_std_s": float(base.std(ddof=1)),
+                "inject_mean_s": float(inj.mean()),
+                "inject_std_s": float(inj.std(ddof=1)),
+                "speedup_mean": float(speed.mean()),
+                "speedup_std": float(speed.std(ddof=1)),
+                "speedup_min": float(speed.min()),
+                "speedup_max": float(speed.max()),
+                "H0": H0[sc.name],
+                "P": z_test_p(speed, H0[sc.name]),
+                "trials": trials,
+            }
+            print(f"{sc.name}_baseline,{base.mean() * 1e6:.1f},")
+            print(f"{sc.name}_inject,{inj.mean() * 1e6:.1f},"
+                  f"speedup={speed.mean():.1f}x P={out[sc.name]['P']:.2e}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def bench_decompose(trials: int) -> dict:
+    """Paper §III-A: explicit (docker save tar) vs implicit (in-place)."""
+    from repro.core import Instruction, LayerStore
+    from .scenarios import _gen
+    out = {}
+    root = tempfile.mkdtemp(prefix="lc_decomp_")
+    try:
+        store = LayerStore(os.path.join(root, "s"), chunk_bytes=1 << 18)
+        ins = [Instruction("FROM", "base", "config"),
+               Instruction("COPY", "payload", "content")]
+        payload = {"data": _gen(7, 64 << 20)}
+        m, _, _ = store.build_image("app", "v1", ins,
+                                    {"payload": lambda: payload})
+        explicit, implicit = [], []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            bundle = store.export_image("app", "v1")      # docker save
+            store2 = LayerStore(os.path.join(root, "tmp"),
+                                chunk_bytes=1 << 18)
+            store2.import_image(bundle)
+            lay = store2.read_layer(m.layer_ids[1])
+            _ = lay.records[0].chunks[0]
+            explicit.append(time.perf_counter() - t0)
+            shutil.rmtree(os.path.join(root, "tmp"))
+            t0 = time.perf_counter()
+            lay = store.open_layer_inplace(m.layer_ids[1])
+            _ = lay.records[0].chunks[0]
+            implicit.append(time.perf_counter() - t0)
+        e, i = np.asarray(explicit), np.asarray(implicit)
+        out = {"explicit_mean_s": float(e.mean()),
+               "implicit_mean_s": float(i.mean()),
+               "speedup": float(e.mean() / i.mean()), "trials": trials}
+        print(f"decompose_explicit,{e.mean() * 1e6:.1f},")
+        print(f"decompose_implicit,{i.mean() * 1e6:.1f},"
+              f"speedup={out['speedup']:.0f}x")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def bench_fallthrough(trials: int) -> dict:
+    """Fig. 2 anatomy: rebuild cost vs depth of the edited layer."""
+    from repro.core import Instruction, LayerStore, inject_payload_update
+    from .scenarios import _edit_chunks, _gen
+    out = {}
+    root = tempfile.mkdtemp(prefix="lc_ft_")
+    n_layers = 6
+    try:
+        for edit_at in (1, n_layers // 2, n_layers - 1):
+            ins = [Instruction("FROM", "base", "config")]
+            payloads = {}
+            for i in range(n_layers):
+                key = f"layer{i}"
+                ins.append(Instruction("RUN" if i % 2 else "COPY", key,
+                                       "content"))
+                payloads[key] = _gen(100 + i, 8 << 20)
+            bt, it = [], []
+            for tr in range(trials):
+                store = LayerStore(os.path.join(root, f"{edit_at}_{tr}"),
+                                   chunk_bytes=1 << 18)
+                prov = {k: (lambda v=v: {"data": v})
+                        for k, v in payloads.items()}
+                store.build_image("app", "v1", ins, prov)
+                edited = dict(payloads)
+                key = f"layer{edit_at}"
+                edited[key] = _edit_chunks(payloads[key], 1, 1 << 18)
+                prov2 = {k: (lambda v=v: {"data": v})
+                         for k, v in edited.items()}
+                t0 = time.perf_counter()
+                store.build_image("app", "v2", ins, prov2,
+                                  parent=("app", "v1"))
+                bt.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                inject_payload_update(store, "app", "v1", "v2i",
+                                      {key: {"data": edited[key]}})
+                it.append(time.perf_counter() - t0)
+                shutil.rmtree(os.path.join(root, f"{edit_at}_{tr}"))
+            b, i2 = np.asarray(bt), np.asarray(it)
+            out[f"edit_at_{edit_at}"] = {
+                "baseline_mean_s": float(b.mean()),
+                "inject_mean_s": float(i2.mean()),
+                "speedup": float((b / i2).mean())}
+            print(f"fallthrough_depth{edit_at}_baseline,"
+                  f"{b.mean() * 1e6:.1f},")
+            print(f"fallthrough_depth{edit_at}_inject,{i2.mean() * 1e6:.1f},"
+                  f"speedup={(b / i2).mean():.1f}x")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def bench_ckpt_cadence(trials: int) -> dict:
+    """Framework integration: full vs incremental checkpoint save cost for
+    an adapter-style update on a real model state (the deployment story)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    out = {}
+    cfg = get_smoke_config("yi-6b").replace(
+        n_layers=4, d_model=256, d_ff=1024, vocab=8192)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = {"step": jnp.int32(0)}
+    root = tempfile.mkdtemp(prefix="lc_ckpt_")
+    try:
+        for mode in ("full", "incremental"):
+            times = []
+            mgr = CheckpointManager(
+                os.path.join(root, mode), cfg.name,
+                CheckpointPolicy(incremental=(mode == "incremental"),
+                                 async_write=False, chunk_bytes=1 << 18))
+            mgr.save(0, params, opt)
+            p2 = jax.tree.map(lambda a: a, params)
+            for t in range(trials):
+                p2 = dict(p2)
+                p2["final_norm"] = p2["final_norm"] * (1.0 + 1e-4)
+                t0 = time.perf_counter()
+                mgr.save(t + 1, p2, opt)
+                times.append(time.perf_counter() - t0)
+            out[mode] = {"mean_s": float(np.mean(times)),
+                         "std_s": float(np.std(times))}
+            print(f"ckpt_{mode},{np.mean(times) * 1e6:.1f},")
+        out["speedup"] = out["full"]["mean_s"] / out["incremental"]["mean_s"]
+        print(f"ckpt_speedup,,{out['speedup']:.1f}x")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def bench_fingerprint(trials: int) -> dict:
+    """Change-detector throughput: host SHA-256 vs on-device fingerprint
+    (jnp path; the Pallas kernel is the TPU-target implementation)."""
+    import hashlib
+
+    import jax.numpy as jnp
+    from repro.core import fingerprint_chunks
+    arr = np.random.default_rng(0).standard_normal(32 << 18)  # 32 MiB f32
+    jarr = jnp.asarray(arr, jnp.float32)
+    fingerprint_chunks(jarr).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        fingerprint_chunks(jarr).block_until_ready()
+    fp_t = (time.perf_counter() - t0) / trials
+    data = arr.tobytes()
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        hashlib.sha256(data).hexdigest()
+    sha_t = (time.perf_counter() - t0) / trials
+    nbytes = len(data)
+    out = {"sha256_GBps": nbytes / sha_t / 1e9,
+           "fingerprint_GBps": nbytes / fp_t / 1e9,
+           "speedup": sha_t / fp_t}
+    print(f"chg_detect_sha256,{sha_t * 1e6:.1f},"
+          f"{out['sha256_GBps']:.2f}GB/s")
+    print(f"chg_detect_fingerprint,{fp_t * 1e6:.1f},"
+          f"{out['fingerprint_GBps']:.2f}GB/s")
+    return out
+
+
+def bench_roofline() -> dict:
+    """Collect the dry-run artifacts into the §Roofline table."""
+    from .roofline_table import build_table
+    table = build_table()
+    for row in table["rows"][:5]:
+        print(f"roofline_{row['arch']}_{row['shape']},,"
+              f"dom={row['dominant']} frac={row['roofline_fraction']:.3f}")
+    print(f"roofline_cells,,{len(table['rows'])}")
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=30)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    trials = 5 if args.quick else args.trials
+
+    os.makedirs(RESULTS, exist_ok=True)
+    results = {}
+    benches = {
+        "scenarios": lambda: bench_scenarios(trials),
+        "decompose": lambda: bench_decompose(max(trials // 3, 3)),
+        "fallthrough": lambda: bench_fallthrough(max(trials // 3, 3)),
+        "ckpt_cadence": lambda: bench_ckpt_cadence(trials),
+        "fingerprint": lambda: bench_fingerprint(trials),
+        "roofline": bench_roofline,
+    }
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            results[name] = fn()
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            results[name] = {"error": str(e)}
+        with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+            json.dump(results[name], f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""The paper's four rebuild scenarios, reconstructed over model-state images.
+
+Each scenario is an image whose layer structure mirrors the paper's
+Dockerfile (Fig. 4); "derivations" are real deterministic compute (payload
+generation from a seed), not sleeps, so baseline fall-through costs are
+honest. Sizes are CPU-scaled but preserve each scenario's *structure*
+(which layer is big, what falls through, what must be re-derived).
+
+Scenario 1  "1-line Python, tiny image"
+    FROM alpine | COPY main.py (small) | CMD
+    edit: one chunk of main.py.
+Scenario 2  "1000-line Python + conda deps"
+    FROM miniconda | COPY src | WORKDIR | RUN apt (big) | RUN conda (bigger)
+    edit: many chunks of src. Docker falls through and re-runs apt+conda;
+    injection re-keys them (they do not derive from src).
+Scenario 3  "1-line Java, compiled OUTSIDE"
+    FROM jdk | COPY app.war (compiled artifact) | EXPOSE | CMD
+    edit: recompilation (outside the timed region) changes the artifact
+    pervasively; injection still skips the config-layer rebuilds.
+Scenario 4  "1000-line Java, compiled INSIDE"
+    FROM ubuntu | RUN jdk | COPY pom | RUN deps | COPY src | RUN package | CMD
+    edit: many chunks of src. BOTH methods must re-run `package`
+    (derives_from src) — the paper's no-win case.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import Instruction, LayerStore, inject_payload_update
+
+KiB, MiB = 1 << 10, 1 << 20
+
+
+def _gen(seed: int, nbytes: int) -> np.ndarray:
+    """Deterministic 'derivation': generating the payload IS the work."""
+    n = nbytes // 4
+    x = (np.arange(n, dtype=np.uint64) + np.uint64(seed * 2654435761))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    # int32 payloads: random bit patterns viewed as float would contain
+    # NaNs, breaking bit-exact equality checks
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+
+
+def _edit_chunks(arr: np.ndarray, n_edits: int, chunk_bytes: int,
+                 seed: int = 1) -> np.ndarray:
+    """Touch n_edits distinct chunks (the '1 line' / '1000 lines' edit)."""
+    out = arr.copy()
+    elems_per_chunk = chunk_bytes // 4
+    rng = np.random.default_rng(seed)
+    chunks = rng.choice(max(arr.size // elems_per_chunk, 1),
+                        size=min(n_edits, max(arr.size // elems_per_chunk, 1)),
+                        replace=False)
+    for c in chunks:
+        out[c * elems_per_chunk] += 1
+    return out
+
+
+@dataclass
+class Scenario:
+    name: str
+    instructions: List[Instruction]
+    payloads: Dict[str, np.ndarray]            # key -> tensor payload
+    edited_key: str
+    edited: np.ndarray
+    # providers re-run on (baseline fall-through | injection re-derive)
+    derive: Dict[str, Callable[[Dict[str, np.ndarray]], np.ndarray]] = \
+        field(default_factory=dict)
+
+
+def scenario_1(chunk_bytes: int) -> Scenario:
+    src = _gen(11, 256 * KiB)
+    return Scenario(
+        name="s1_python_tiny",
+        instructions=[
+            Instruction("FROM", "python:alpine", "config"),
+            Instruction("COPY", "main.py", "content"),
+            Instruction("CMD", "python ./main.py", "config"),
+        ],
+        payloads={"main.py": src},
+        edited_key="main.py",
+        edited=_edit_chunks(src, 1, chunk_bytes),
+    )
+
+
+def scenario_2(chunk_bytes: int) -> Scenario:
+    src = _gen(21, 1 * MiB)
+    return Scenario(
+        name="s2_python_conda",
+        instructions=[
+            Instruction("FROM", "continuumio/miniconda3", "config"),
+            Instruction("COPY", "src", "content"),
+            Instruction("ENV", "WORKDIR /root", "config"),
+            Instruction("RUN", "apt_install", "content"),     # independent
+            Instruction("RUN", "conda_env", "content"),       # independent
+            Instruction("CMD", "python main.py", "config"),
+        ],
+        payloads={"src": src,
+                  "apt_install": _gen(22, 48 * MiB),
+                  "conda_env": _gen(23, 96 * MiB)},
+        edited_key="src",
+        edited=_edit_chunks(src, 1000 // 40, chunk_bytes),  # ~1000 lines
+        derive={"apt_install": lambda _: _gen(22, 48 * MiB),
+                "conda_env": lambda _: _gen(23, 96 * MiB)},
+    )
+
+
+def _compile(src: np.ndarray, nbytes: int) -> np.ndarray:
+    """'Compilation': output depends pervasively on every source byte."""
+    h = int(np.abs(src.astype(np.int64)).sum() % (1 << 31))
+    return _gen(h ^ 0x5EED, nbytes)
+
+
+def scenario_3(chunk_bytes: int) -> Scenario:
+    src = _gen(31, 64 * KiB)
+    war = _compile(src, 4 * MiB)            # compiled OUTSIDE (untimed)
+    src2 = _edit_chunks(src, 1, chunk_bytes)
+    return Scenario(
+        name="s3_java_precompiled",
+        instructions=[
+            Instruction("FROM", "java:8-jdk-alpine", "config"),
+            Instruction("COPY", "app.war", "content"),
+            Instruction("ENV", "EXPOSE 8080", "config"),
+            Instruction("CMD", "java -jar app.war", "config"),
+        ],
+        payloads={"app.war": war},
+        edited_key="app.war",
+        edited=_compile(src2, 4 * MiB),
+    )
+
+
+def scenario_4(chunk_bytes: int) -> Scenario:
+    src = _gen(41, 1 * MiB)
+    pom = _gen(42, 16 * KiB)
+    deps = _gen(43, 40 * MiB)
+
+    def package(payloads: Dict[str, np.ndarray]) -> np.ndarray:
+        return _compile(payloads["src"], 16 * MiB)   # compiled INSIDE
+
+    return Scenario(
+        name="s4_java_compile_inside",
+        instructions=[
+            Instruction("FROM", "ubuntu:latest", "config"),
+            Instruction("RUN", "apt_jdk", "content"),
+            Instruction("COPY", "pom.xml", "content"),
+            Instruction("RUN", "mvn_deps", "content",
+                        derives_from=["pom.xml"]),
+            Instruction("COPY", "src", "content"),
+            Instruction("RUN", "mvn_package", "content",
+                        derives_from=["src", "mvn_deps"]),
+            Instruction("CMD", "java -jar target/app.jar", "config"),
+        ],
+        payloads={"apt_jdk": _gen(44, 64 * MiB), "pom.xml": pom,
+                  "mvn_deps": deps, "src": src,
+                  "mvn_package": package({"src": src})},
+        edited_key="src",
+        edited=_edit_chunks(src, 1000 // 40, chunk_bytes),
+        derive={"apt_jdk": lambda _: _gen(44, 64 * MiB),
+                "mvn_deps": lambda p: _gen(43, 40 * MiB),
+                "mvn_package": package},
+    )
+
+
+SCENARIOS = [scenario_1, scenario_2, scenario_3, scenario_4]
+
+
+def run_scenario(sc: Scenario, store_root: str, trials: int,
+                 chunk_bytes: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (baseline_seconds, injection_seconds) per trial."""
+    base_t, inj_t = [], []
+    for trial in range(trials):
+        store = LayerStore(f"{store_root}/{sc.name}_{trial}",
+                           chunk_bytes=chunk_bytes)
+        payloads = dict(sc.payloads)
+        # build v1 (untimed)
+        prov1 = {k: (lambda v=v: {"data": v}) for k, v in payloads.items()}
+        store.build_image("app", "v1", sc.instructions, prov1)
+
+        new_payloads = dict(payloads)
+        new_payloads[sc.edited_key] = sc.edited
+
+        def prov_v2(key):
+            def f():
+                if key in sc.derive and key != sc.edited_key:
+                    return {"data": sc.derive[key](new_payloads)}
+                return {"data": new_payloads[key]}
+            return f
+
+        prov2 = {k: prov_v2(k) for k in new_payloads}
+
+        # --- Docker-faithful baseline: DLC cache + fall-through ---
+        t0 = time.perf_counter()
+        store.build_image("app", "v2_base", sc.instructions, prov2,
+                          parent=("app", "v1"))
+        base_t.append(time.perf_counter() - t0)
+
+        # --- the paper's injection method ---
+        t0 = time.perf_counter()
+        inject_payload_update(
+            store, "app", "v1", "v2_inj",
+            {sc.edited_key: {"data": new_payloads[sc.edited_key]}},
+            providers=prov2)
+        inj_t.append(time.perf_counter() - t0)
+
+        # correctness: both paths end at identical content
+        a = store.load_image_payload("app", "v2_base")
+        b = store.load_image_payload("app", "v2_inj")
+        assert set(a) == set(b)
+        for k in a:
+            assert np.array_equal(a[k], b[k]), (sc.name, k)
+        import shutil
+        shutil.rmtree(f"{store_root}/{sc.name}_{trial}")
+    return np.asarray(base_t), np.asarray(inj_t)

@@ -1,0 +1,68 @@
+"""Quickstart: train a small model end-to-end with incremental (code
+injection) checkpointing, then serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager, CheckpointPolicy
+from repro.configs import get_smoke_config
+from repro.data import SyntheticTokens
+from repro.models import init_params, loss_fn
+from repro.optim import AdamWConfig, apply_update, init_opt_state
+from repro.serve import Engine
+
+
+def main():
+    cfg = get_smoke_config("yi-6b").replace(n_layers=4)
+    print(f"arch={cfg.name} (reduced) params={cfg.param_count() / 1e6:.2f}M")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    acfg = AdamWConfig(peak_lr=3e-3, warmup_steps=10, decay_steps=200,
+                       weight_decay=0.0)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="lc_quickstart_")
+    mgr = CheckpointManager(ckpt_dir, cfg.name,
+                            CheckpointPolicy(incremental=True,
+                                             async_write=False))
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt, stats = apply_update(acfg, params, opt, grads)
+        return params, opt, loss
+
+    ds = SyntheticTokens(cfg.vocab, batch=8, seq=64, seed=0)
+    for s in range(120):
+        b = ds.batch_at(s)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step(params, opt, batch)
+        if s % 20 == 0:
+            print(f"step {s:4d}  loss {float(loss):.4f}")
+        if (s + 1) % 40 == 0:
+            rep = mgr.save(s + 1, jax.tree.map(np.asarray, params),
+                           jax.tree.map(np.asarray, opt))
+            print(f"  [ckpt] step {s + 1}: injected={rep.layers_injected} "
+                  f"rekeyed={rep.layers_rekeyed} "
+                  f"bytes={rep.bytes_serialized / 1e6:.1f}MB "
+                  f"({rep.wall_seconds * 1e3:.0f}ms)")
+
+    print("\nserving greedy samples from the trained weights:")
+    eng = Engine(cfg, params, max_len=96)
+    prompts = np.asarray(ds.batch_at(0)["tokens"][:2, :16])
+    res = eng.generate(prompts, steps=12)
+    print("generated:", res.tokens.tolist())
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .registry import ARCH_IDS, get_config, get_smoke_config, list_archs
+from .shapes import SHAPES, ShapeSpec, applicable_shapes, input_specs
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "list_archs",
+           "SHAPES", "ShapeSpec", "applicable_shapes", "input_specs"]

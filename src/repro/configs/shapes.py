@@ -1,0 +1,76 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+LM transformer shapes are seq_len x global_batch. ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token with a KV cache of seq_len), NOT
+``train_step``. ``long_500k`` runs only for sub-quadratic archs (SSM /
+hybrid / SWA) — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return names
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    if sp.kind == "train":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+            "mask": _sds((B, S), jnp.float32),
+        }
+        if cfg.n_prefix_embeds:
+            specs["prefix_embeds"] = _sds(
+                (B, cfg.n_prefix_embeds, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        return specs
+    if sp.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.n_prefix_embeds:
+            specs["prefix_embeds"] = _sds(
+                (B, cfg.n_prefix_embeds, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        return specs
+    if sp.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        return {
+            "cache": cache,
+            "tokens": _sds((B,), jnp.int32),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(sp.kind)

@@ -1,0 +1,28 @@
+"""The paper's primary contribution: a content-addressed, layered artifact
+store for model state with O(delta) in-place injection updates (the "code
+injection method"), checksum re-keying, clone-before-inject, dedup and a
+verifying registry — Docker's layer system re-built for JAX training state.
+"""
+from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, bytes_to_tensor,
+                      chunk_tensor, sha256_hex, tensor_to_bytes)
+from .diff import (ChunkEdit, LayerDiff, diff_layer_fingerprint,
+                   diff_layer_host, locate_changed_layers)
+from .fingerprint import (fingerprint_chunks, fingerprint_chunks_ref,
+                          fingerprint_tree)
+from .inject import (StructureChangeError, apply_edits, clone_layer,
+                     inject_image, inject_payload_update)
+from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
+                       chain_checksum, content_checksum, new_uuid)
+from .registry import PushRejected, PushStats, pull, push
+from .store import BuildReport, LayerStore
+
+__all__ = [
+    "DEFAULT_CHUNK_BYTES", "TensorRecord", "bytes_to_tensor", "chunk_tensor",
+    "sha256_hex", "tensor_to_bytes", "ChunkEdit", "LayerDiff",
+    "diff_layer_fingerprint", "diff_layer_host", "locate_changed_layers",
+    "fingerprint_chunks", "fingerprint_chunks_ref", "fingerprint_tree",
+    "StructureChangeError", "apply_edits", "clone_layer", "inject_image",
+    "inject_payload_update", "ImageConfig", "Instruction", "LayerDescriptor",
+    "Manifest", "chain_checksum", "content_checksum", "new_uuid",
+    "PushRejected", "PushStats", "pull", "push", "BuildReport", "LayerStore",
+]

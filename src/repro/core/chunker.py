@@ -1,0 +1,124 @@
+"""Tensor <-> content-addressed chunk serialization.
+
+A pytree leaf is serialized to raw little-endian bytes and split into
+fixed-size chunks. Chunks are the smallest addressable unit of the store —
+the analogue of files inside a Docker ``layer.tar``. The chunk boundary is
+what makes the paper's injection O(delta): an edit touching k chunks costs
+k chunk writes + k hashes, independent of layer size.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB
+
+
+def sha256_hex(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+@dataclass(frozen=True)
+class TensorRecord:
+    """Descriptor of one serialized tensor inside a layer."""
+
+    name: str                 # pytree path, e.g. "params/blocks/attn/wq"
+    shape: Tuple[int, ...]
+    dtype: str                # numpy dtype string, e.g. "bfloat16"
+    chunk_bytes: int
+    chunks: Tuple[str, ...]   # sha256 hex of each chunk, in order
+
+    @property
+    def nbytes(self) -> int:
+        n = int(np.prod(self.shape)) if self.shape else 1
+        return n * dtype_itemsize(self.dtype)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "chunk_bytes": self.chunk_bytes,
+            "chunks": list(self.chunks),
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "TensorRecord":
+        return TensorRecord(
+            name=d["name"],
+            shape=tuple(d["shape"]),
+            dtype=d["dtype"],
+            chunk_bytes=int(d["chunk_bytes"]),
+            chunks=tuple(d["chunks"]),
+        )
+
+
+_DTYPE_SIZES = {
+    "bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+    "int8": 1, "uint8": 1, "int16": 2, "uint16": 2,
+    "int32": 4, "uint32": 4, "int64": 8, "uint64": 8, "bool": 1,
+}
+
+
+def dtype_itemsize(dtype: str) -> int:
+    if dtype in _DTYPE_SIZES:
+        return _DTYPE_SIZES[dtype]
+    return np.dtype(dtype).itemsize
+
+
+def tensor_to_bytes(arr) -> bytes:
+    """Serialize an array (numpy or jax) to contiguous little-endian bytes.
+
+    bfloat16 is handled by bit-level uint16 view (numpy has no bf16).
+    """
+    a = np.asarray(arr)
+    if a.dtype == np.dtype("V2") or str(arr.dtype) == "bfloat16":
+        # jax bf16 -> numpy via ml_dtypes view; np.asarray on a bf16 jax
+        # array yields a bfloat16 ml_dtypes array; view as uint16 bits.
+        a = np.asarray(arr)
+        a = a.view(np.uint16)
+    return np.ascontiguousarray(a).tobytes()
+
+
+def bytes_to_tensor(data: bytes, shape: Tuple[int, ...], dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        import ml_dtypes  # ships with jax
+
+        a = np.frombuffer(data, dtype=np.uint16).view(ml_dtypes.bfloat16)
+    else:
+        a = np.frombuffer(data, dtype=np.dtype(dtype))
+    return a.reshape(shape)
+
+
+def iter_chunks(data: bytes, chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Iterator[bytes]:
+    for off in range(0, max(len(data), 1), chunk_bytes):
+        yield data[off:off + chunk_bytes]
+
+
+def chunk_tensor(name: str, arr, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+    """-> (TensorRecord, [(sha256, bytes), ...]) for every chunk."""
+    dtype = str(arr.dtype)
+    data = tensor_to_bytes(arr)
+    pairs: List[Tuple[str, bytes]] = []
+    hashes: List[str] = []
+    for piece in iter_chunks(data, chunk_bytes):
+        h = sha256_hex(piece)
+        hashes.append(h)
+        pairs.append((h, piece))
+    rec = TensorRecord(
+        name=name,
+        shape=tuple(int(s) for s in np.shape(arr)),
+        dtype=dtype,
+        chunk_bytes=chunk_bytes,
+        chunks=tuple(hashes),
+    )
+    return rec, pairs
+
+
+def assemble_tensor(rec: TensorRecord, read_blob) -> np.ndarray:
+    """Rebuild a tensor from its chunk records. ``read_blob(hash)->bytes``."""
+    data = b"".join(read_blob(h) for h in rec.chunks)
+    return bytes_to_tensor(data, rec.shape, rec.dtype)

@@ -1,0 +1,189 @@
+"""C2 + C3 + C4 — the code injection method itself.
+
+``inject_image`` performs the paper's full pipeline on a stored image:
+
+  1. (C1) caller supplies per-layer ``LayerDiff``s (from core.diff).
+  2. (C4) clone-before-inject: each changed layer gets a NEW layer id whose
+     records initially share every chunk blob with the original (an
+     O(#chunks) metadata copy — blobs are content-addressed and immutable,
+     so "two identical layers" costs no payload bytes). The old image and
+     any other image dedup-sharing the old layer are untouched.
+  3. (C2) injection: write only the changed chunk blobs into the clone.
+  4. (C3) checksum bypass, "update both the key and the lock": recompute the
+     clone's content checksum from its (mostly reused) chunk hashes, then
+     rewrite every occurrence of the old layer id/checksum in the manifest
+     and config, and re-key the chain checksums of every downstream layer.
+     Downstream layers keep their content (and content checksum) — they are
+     *re-keyed*, not re-built. That metadata walk is what turns the O(layer
+     bytes) rebuild into O(delta + #layers) — the paper's O(n) -> O(1).
+  5. Scenario-4 rule: any downstream RUN layer whose ``derives_from`` names
+     an injected payload is a *derived* artifact and MUST be re-derived
+     (the paper: "we must not only inject code in the layer containing the
+     source code but also rebuild the layer after it that compiles the
+     source code"). Its provider is re-executed; everything else is re-keyed
+     only. Config layers are left to the normal (cheap, empty-layer) path.
+
+Returns the new manifest/config plus a BuildReport whose counters benchmarks
+compare against the baseline ``LayerStore.build_image`` fall-through.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .chunker import TensorRecord, chunk_tensor
+from .diff import LayerDiff, diff_layer_host
+from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
+                       chain_checksum, content_checksum, new_uuid)
+from .store import BuildReport, LayerStore
+
+
+class StructureChangeError(ValueError):
+    """Raised when asked to inject a 'compiled' (structure) change — the
+    paper's integrity rule: literal injection cannot guarantee integrity for
+    compiled artifacts; callers must fall back to a rebuild."""
+
+
+def clone_layer(layer: LayerDescriptor) -> LayerDescriptor:
+    """C4: identical layer under a fresh id (metadata-only; blobs shared)."""
+    return LayerDescriptor(
+        layer_id=new_uuid(),
+        version=layer.version + 1,
+        instruction=layer.instruction,
+        checksum=layer.checksum,
+        chain=layer.chain,
+        records=list(layer.records),
+        empty=layer.empty,
+        family=layer.family,
+    )
+
+
+def apply_edits(store: LayerStore, layer: LayerDescriptor, diff: LayerDiff,
+                report: BuildReport) -> LayerDescriptor:
+    """C2+C3 on a single (already cloned) layer."""
+    if not diff.injectable:
+        raise StructureChangeError(
+            f"layer {diff.layer_id}: structure change is not injectable")
+    by_name = {r.name: i for i, r in enumerate(layer.records)}
+    records = list(layer.records)
+    for edit in diff.edits:
+        idx = by_name[edit.tensor]
+        rec = records[idx]
+        chunks = list(rec.chunks)
+        chunks[edit.index] = edit.new_hash
+        if store.write_blob(edit.new_hash, edit.data):
+            report.chunks_written += 1
+        report.bytes_serialized += len(edit.data)
+        report.bytes_hashed += len(edit.data)
+        records[idx] = TensorRecord(rec.name, rec.shape, rec.dtype,
+                                    rec.chunk_bytes, tuple(chunks))
+    layer.records = records
+    layer.checksum = content_checksum(records)   # O(#chunks) metadata hash
+    report.layers_injected += 1
+    return layer
+
+
+def inject_image(store: LayerStore,
+                 name: str, tag: str, new_tag: str,
+                 diffs: Dict[str, LayerDiff],
+                 providers: Optional[Dict[str, Callable[[], Dict[str, np.ndarray]]]] = None,
+                 ) -> Tuple[Manifest, ImageConfig, BuildReport]:
+    """Run the full injection pipeline; ``diffs`` keyed by layer_id."""
+    report = BuildReport()
+    t0 = time.perf_counter()
+    manifest, config = store.read_image(name, tag)
+    layers = [store.read_layer(lid) for lid in manifest.layer_ids]
+
+    injected_payload_keys: set = set()
+    new_layers: List[LayerDescriptor] = []
+    parent_chain: Optional[str] = None
+    dirty = False   # once any upstream id changed, downstream chains re-key
+
+    for layer in layers:
+        diff = diffs.get(layer.layer_id)
+        ins = layer.instruction
+
+        needs_rederive = (
+            ins.op == "RUN" and not layer.empty and
+            any(dep in injected_payload_keys for dep in ins.derives_from))
+
+        if diff is not None and not diff.is_empty:
+            if not diff.injectable:
+                raise StructureChangeError(
+                    f"layer {layer.layer_id} ({ins.text}): structure change")
+            clone = clone_layer(layer)                     # C4
+            clone = apply_edits(store, clone, diff, report)  # C2
+            clone.chain = chain_checksum(parent_chain, clone.checksum,
+                                         ins.text)          # C3 (key)
+            store.write_layer(clone)
+            new_layers.append(clone)
+            injected_payload_keys.add(ins.arg)
+            dirty = True
+        elif needs_rederive:
+            # Scenario-4: derived layer must actually re-run its derivation.
+            if providers is None or ins.arg not in providers:
+                raise StructureChangeError(
+                    f"layer {layer.layer_id} derives from injected payload "
+                    f"but no provider given to re-derive it")
+            payload = providers[ins.arg]()
+            report.derivations_run += 1
+            rebuilt = store.build_content_layer(
+                ins, payload, parent_chain, report,
+                family=layer.family, version=layer.version + 1)
+            new_layers.append(rebuilt)
+            dirty = True
+        elif dirty:
+            # Downstream of a change: RE-KEY only (chain checksum), never
+            # re-serialize. This replaces Docker's fall-through rebuild.
+            clone = clone_layer(layer)
+            clone.chain = chain_checksum(parent_chain, clone.checksum,
+                                         ins.text)
+            store.write_layer(clone)
+            new_layers.append(clone)
+            report.layers_rekeyed += 1
+        else:
+            new_layers.append(layer)
+            report.layers_cached += 1
+
+        parent_chain = new_layers[-1].chain
+
+    new_config = ImageConfig(
+        config_id=new_uuid(), arch=config.arch, version=config.version + 1,
+        layer_checksums={l.layer_id: l.checksum for l in new_layers},
+        layer_chains={l.layer_id: l.chain for l in new_layers},
+        history=config.history + [{
+            "instruction": "INJECT",
+            "edits": int(sum(len(d.edits) for d in diffs.values())),
+        }],
+    )
+    new_manifest = Manifest(name=name, tag=new_tag,
+                            layer_ids=[l.layer_id for l in new_layers],
+                            config_id=new_config.config_id)
+    store.write_image(new_manifest, new_config)
+    report.wall_seconds = time.perf_counter() - t0
+    return new_manifest, new_config, report
+
+
+def inject_payload_update(store: LayerStore, name: str, tag: str,
+                          new_tag: str,
+                          payloads: Dict[str, Dict[str, np.ndarray]],
+                          providers=None,
+                          ) -> Tuple[Manifest, ImageConfig, BuildReport]:
+    """Convenience: C1 (host diff) + full injection for new payload values.
+
+    ``payloads`` maps instruction arg (payload key) -> new payload dict.
+    """
+    manifest, _ = store.read_image(name, tag)
+    diffs: Dict[str, LayerDiff] = {}
+    for lid in manifest.layer_ids:
+        layer = store.read_layer(lid)
+        if layer.empty:
+            continue
+        key = layer.instruction.arg
+        if key in payloads:
+            d = diff_layer_host(layer, payloads[key])
+            if not d.is_empty:
+                diffs[lid] = d
+    return inject_image(store, name, tag, new_tag, diffs, providers)

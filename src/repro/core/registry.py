@@ -1,0 +1,72 @@
+"""Remote-registry model — paper §III.C (redeployment).
+
+A "remote" is simply another LayerStore that *verifies everything it
+receives*. Pushing an image copies missing blobs + layer descriptors +
+manifest/config, then runs full verification at the destination. This is
+the integrity gate the paper's C3/C4 must satisfy: a naive in-place
+mutation (same layer id, new content) is REJECTED because the remote
+already holds the old layer under that id with a different checksum trace;
+a clone-before-inject (new layer id, re-keyed manifest) is ACCEPTED as a
+legitimately new layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from .manifest import dumps
+from .store import LayerStore
+
+
+class PushRejected(RuntimeError):
+    pass
+
+
+@dataclass
+class PushStats:
+    blobs_sent: int = 0
+    blobs_dedup: int = 0
+    layers_sent: int = 0
+    layers_dedup: int = 0
+    bytes_sent: int = 0
+
+
+def push(src: LayerStore, dst: LayerStore, name: str, tag: str) -> PushStats:
+    stats = PushStats()
+    problems = src.verify_image(name, tag, deep=False)
+    if problems:
+        raise PushRejected(f"source image fails verification: {problems}")
+    manifest, config = src.read_image(name, tag)
+
+    for lid in manifest.layer_ids:
+        layer = src.read_layer(lid)
+        if dst.has_layer(lid):
+            existing = dst.read_layer(lid)
+            if existing.checksum != layer.checksum:
+                # The paper's exact failure mode: same id, diverged content.
+                raise PushRejected(
+                    f"layer {lid}: remote holds a different checksum trace "
+                    f"for this id (in-place mutation without a new id?)")
+            stats.layers_dedup += 1
+        else:
+            stats.layers_sent += 1
+        for rec in layer.records:
+            for h in rec.chunks:
+                if dst.has_blob(h):
+                    stats.blobs_dedup += 1
+                else:
+                    data = src.read_blob(h)
+                    dst.write_blob(h, data)
+                    stats.blobs_sent += 1
+                    stats.bytes_sent += len(data)
+        dst.write_layer(layer)
+    dst.write_image(manifest, config)
+
+    problems = dst.verify_image(name, tag, deep=True)
+    if problems:
+        raise PushRejected(f"post-push verification failed: {problems}")
+    return stats
+
+
+def pull(src: LayerStore, dst: LayerStore, name: str, tag: str) -> PushStats:
+    return push(src, dst, name, tag)

@@ -1,0 +1,6 @@
+from .straggler import DeadlineSkipper, StragglerStats
+from .watchdog import Watchdog
+from .elastic import shrink_mesh_shape
+
+__all__ = ["DeadlineSkipper", "StragglerStats", "Watchdog",
+           "shrink_mesh_shape"]

@@ -1,0 +1,21 @@
+"""Elastic scaling helpers: choose a new mesh after losing devices.
+
+Policy: keep the model axis intact (TP degree is a property of the
+weights' sharding math), shrink the data axis to the largest value that
+fits the surviving device count, and drop the remainder (hot spares).
+Restore then goes through ckpt.reshard_restore — checkpoints are
+mesh-agnostic (logical tensors, chunk-addressed).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def shrink_mesh_shape(alive_devices: int, model: int = 16,
+                      pods: int = 1) -> Tuple[int, ...]:
+    """-> (data, model) (or (pod, data, model)) for the surviving devices."""
+    per_pod = alive_devices // pods
+    data = max(1, per_pod // model)
+    if pods > 1:
+        return (pods, data, model)
+    return (data, model)

@@ -1,0 +1,43 @@
+"""Step watchdog: detects a hung step and fires a recovery callback.
+
+On real clusters a hung collective (dead peer) blocks forever; the watchdog
+converts that into a bounded failure the trainer handles via
+checkpoint-restore + elastic re-mesh.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional
+
+
+class Watchdog:
+    def __init__(self, timeout_seconds: float,
+                 on_timeout: Callable[[], None]):
+        self.timeout = timeout_seconds
+        self.on_timeout = on_timeout
+        self._timer: Optional[threading.Timer] = None
+        self.fired = False
+
+    def arm(self) -> None:
+        self.disarm()
+        self.fired = False
+
+        def fire():
+            self.fired = True
+            self.on_timeout()
+
+        self._timer = threading.Timer(self.timeout, fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def disarm(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def __enter__(self):
+        self.arm()
+        return self
+
+    def __exit__(self, *exc):
+        self.disarm()

@@ -1,0 +1,54 @@
+"""Chunk fingerprint — Pallas TPU kernel (the paper's C1 on-device).
+
+Computes the 64-bit multiply-xor fingerprint of every checkpoint chunk at
+HBM bandwidth: grid (n_chunks,), each step streams one chunk's uint32 lanes
+into VMEM, mixes them on the VPU (elementwise multiply/xor/shift — no MXU),
+and reduces to 2 int32 words. The (n_chunks, 2) table (16 B per MiB chunk)
+is all that crosses the host link; only changed chunks are then fetched and
+SHA-256'd by the store (core/diff.diff_layer_fingerprint).
+
+Matches core.fingerprint bit-for-bit (same constants, same mix).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_C1 = 0x9E3779B9
+_C2 = 0x85EBCA6B
+_C3 = 0xC2B2AE35
+
+
+def _fp_kernel(u_ref, out_ref):
+    u = u_ref[0]                                     # (lanes,) uint32
+    lanes = u.shape[0]
+    c1, c2, c3 = (jnp.uint32(_C1), jnp.uint32(_C2), jnp.uint32(_C3))
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (lanes,), 0)
+    mixed = (u * c1) ^ (pos * c2 + c3)
+    mixed = mixed ^ (mixed >> jnp.uint32(15))
+    mixed = mixed * c3
+    fp_xor = jax.lax.reduce(mixed, jnp.uint32(0), jax.lax.bitwise_xor,
+                            dimensions=(0,))
+    fp_sum = jnp.sum(mixed, dtype=jnp.uint32)
+    out = jnp.stack([fp_xor, fp_sum]).astype(jnp.uint32)
+    out_ref[0] = jax.lax.bitcast_convert_type(out, jnp.int32)
+
+
+def fingerprint_lanes(u32_lanes: jax.Array, *, interpret: bool = False
+                      ) -> jax.Array:
+    """u32_lanes: (n_chunks, lanes_per_chunk) uint32 -> (n_chunks, 2) i32."""
+    n_chunks, lanes = u32_lanes.shape
+    return pl.pallas_call(
+        _fp_kernel,
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((1, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, 2), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(u32_lanes)

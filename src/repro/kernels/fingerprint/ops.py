@@ -1,0 +1,30 @@
+"""Jitted wrapper: array -> per-chunk fingerprints via the Pallas kernel.
+
+Reuses core.fingerprint's lane conversion so chunk boundaries and bit
+patterns match the store exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.fingerprint import _to_u32_lanes
+from .kernel import fingerprint_lanes
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_bytes", "interpret"))
+def fingerprint(arr: jax.Array, chunk_bytes: int = 1 << 20, *,
+                interpret: bool = False) -> jax.Array:
+    itemsize = jnp.dtype(arr.dtype).itemsize
+    if arr.dtype == jnp.bool_:
+        itemsize = 1
+    elems_per_chunk = max(1, chunk_bytes // itemsize)
+    n = arr.size
+    n_chunks = max(1, -(-n // elems_per_chunk))
+    u = _to_u32_lanes(arr)
+    lanes_per_chunk = (elems_per_chunk * u.size) // max(n, 1) if n else 1
+    pad = n_chunks * lanes_per_chunk - u.size
+    u = jnp.pad(u, (0, pad)).reshape(n_chunks, lanes_per_chunk)
+    return fingerprint_lanes(u, interpret=interpret)

@@ -1,0 +1,4 @@
+"""Oracle: the numpy fingerprint from core (one source of truth)."""
+from ...core.fingerprint import fingerprint_chunks_ref
+
+__all__ = ["fingerprint_chunks_ref"]

@@ -1,0 +1,30 @@
+"""Jitted public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import flash_attention_fwd
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "q_block", "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    q_block: int = 512, kv_block: int = 512,
+                    interpret: bool = False):
+    """q: (B, Hq, S, D); k/v: (B, KVH, S, D) -> (B, Hq, S, D).
+
+    TPU-target Pallas kernel; pass interpret=True to execute the kernel
+    body in Python on CPU (how CI validates it against the oracle).
+    """
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               scale=scale, q_block=q_block,
+                               kv_block=kv_block, interpret=interpret)
+
+
+reference = flash_attention_ref

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, SWA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, KVH, S, D) -> (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    KVH = k.shape[1]
+    G = Hq // KVH
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

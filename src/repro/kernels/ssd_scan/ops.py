@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan
+from .ref import ssd_reference
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bc, Cc, D, *, chunk: int = 128, interpret: bool = False):
+    return ssd_scan(x, dt, A, Bc, Cc, D, chunk=chunk, interpret=interpret)
+
+
+reference = ssd_reference

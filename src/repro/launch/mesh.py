@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips (TPU v5e pod slice).
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the "pod"
+axis carries only data parallelism + the inter-pod gradient all-reduce
+(DCN-friendly: one collective per step crosses pods).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run forces 512 host devices *before* first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Elastic-scaling entry: any (data, model) factorization of the
+    currently-alive device set (see ft/elastic.py)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

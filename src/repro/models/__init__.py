@@ -1,0 +1,6 @@
+from .config import ModelConfig
+from .model import (decode_step, init_cache, init_params, loss_fn,
+                    padded_vocab, param_specs, prefill)
+
+__all__ = ["ModelConfig", "decode_step", "init_cache", "init_params",
+           "loss_fn", "padded_vocab", "param_specs", "prefill"]

@@ -1,0 +1,219 @@
+"""Attention — memory-bounded pure-jnp implementations.
+
+Three paths, all numerically equivalent to naive softmax attention (the
+oracle in tests and in kernels/flash_attention/ref.py):
+
+* ``attention_blockwise`` — lax.scan over KV blocks with online softmax:
+  O(S²) FLOPs (causal-masked half is wasted — the TPU Pallas flash kernel
+  skips it; the waste shows up honestly in the roofline "useful flops"
+  ratio), O(S·block) memory.
+* ``attention_banded`` — for sliding-window attention: lax.scan over *query*
+  blocks, each attending to a fixed-size (window + q_block) KV slice via
+  dynamic_slice — O(S·W) FLOPs, wasteless up to block rounding.
+* ``attention_decode`` — single-query attention over a cache (optionally a
+  ring buffer for SWA).
+
+All operate on (B, S, H, D) layouts with GQA grouping handled by reshaping
+q to (B, KVH, G, S, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_heads(q, n_kv: int):
+    """(B, S, Hq, D) -> (B, KVH, G, S, D)"""
+    B, S, Hq, D = q.shape
+    G = Hq // n_kv
+    return q.reshape(B, S, n_kv, G, D).transpose(0, 2, 3, 1, 4)
+
+
+def _merge_heads(x):
+    """(B, KVH, G, S, D) -> (B, S, Hq, D)"""
+    B, KVH, G, S, D = x.shape
+    return x.transpose(0, 3, 1, 2, 4).reshape(B, S, KVH * G, D)
+
+
+def attention_blockwise(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        kv_block: int = 512,
+                        scale: Optional[float] = None,
+                        score_dtype=jnp.float32) -> jax.Array:
+    """q: (B, S, Hq, Dk); k: (B, S, KVH, Dk); v: (B, S, KVH, Dv)."""
+    B, S, Hq, Dk = q.shape
+    KVH = k.shape[2]
+    Dv = v.shape[3]
+    scale = scale if scale is not None else Dk ** -0.5
+    score_dtype = jnp.dtype(score_dtype)
+    kv_block = min(kv_block, S)
+    while S % kv_block:
+        kv_block //= 2
+    nb = S // kv_block
+
+    qh = _split_heads(q * jnp.asarray(scale, q.dtype), KVH)   # (B,KVH,G,S,Dk)
+    kh = k.transpose(0, 2, 1, 3)                              # (B,KVH,S,Dk)
+    vh = v.transpose(0, 2, 1, 3)                              # (B,KVH,S,Dv)
+    q_pos = jnp.arange(S)
+    G = Hq // KVH
+
+    @jax.checkpoint     # backward recomputes the block scores (flash-style)
+    def body(carry, j):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kh, j * kv_block, kv_block, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vh, j * kv_block, kv_block, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, kb,
+                       preferred_element_type=jnp.float32) \
+            .astype(score_dtype)
+        kv_pos = j * kv_block + jnp.arange(kv_block)
+        mask = jnp.ones((S, kv_block), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        s = jnp.where(mask[None, None, None], s,
+                      jnp.asarray(NEG_INF, score_dtype))
+        m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+        p = jnp.exp(s - m_new[..., None].astype(score_dtype))
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.astype(jnp.float32).sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KVH, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KVH, G, S, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return _merge_heads(out).astype(q.dtype)
+
+
+def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int, q_block: int = 512,
+                     scale: Optional[float] = None,
+                     score_dtype=jnp.float32) -> jax.Array:
+    """Sliding-window causal attention, O(S·window).
+
+    Scans over query blocks; each block attends to a fixed-size KV slice
+    [start, start + window + q_block) where start = max(0, blk_end - W - QB),
+    clamped so the slice is static-shaped (dynamic_slice clamps at edges and
+    masking fixes up the overlap).
+    """
+    B, S, Hq, Dk = q.shape
+    KVH = k.shape[2]
+    Dv = v.shape[3]
+    scale = scale if scale is not None else Dk ** -0.5
+    q_block = min(q_block, S)
+    while S % q_block:
+        q_block //= 2
+    nqb = S // q_block
+    span = min(S, window + q_block)
+
+    qh = _split_heads(q * jnp.asarray(scale, q.dtype), KVH)   # (B,KVH,G,S,D)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    G = Hq // KVH
+
+    @jax.checkpoint     # backward recomputes banded scores per q block
+    def body(_, i):
+        q0 = i * q_block
+        qb = jax.lax.dynamic_slice_in_dim(qh, q0, q_block, axis=3)
+        start = jnp.maximum(q0 + q_block - span, 0)
+        kb = jax.lax.dynamic_slice_in_dim(kh, start, span, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vh, start, span, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                       preferred_element_type=jnp.float32) \
+            .astype(jnp.dtype(score_dtype))
+        q_pos = q0 + jnp.arange(q_block)
+        kv_pos = start + jnp.arange(span)
+        mask = (q_pos[:, None] >= kv_pos[None, :]) & \
+               (q_pos[:, None] - kv_pos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s,
+                      jnp.asarray(NEG_INF, jnp.dtype(score_dtype)))
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.astype(jnp.float32).sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd",
+                       (p.astype(jnp.float32) / jnp.maximum(l, 1e-30)
+                        ).astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nqb))
+    # outs: (nqb, B, KVH, G, q_block, Dv) -> (B, KVH, G, S, Dv)
+    outs = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KVH, G, S, Dv)
+    return _merge_heads(outs).astype(q.dtype)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_positions: jax.Array, pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode attention.
+
+    q: (B, 1, Hq, Dk); caches: (B, C, KVH, D); cache_positions: (C,) the
+    absolute position stored in each cache slot (ring-aware); pos: scalar —
+    the current token's position (its K/V must already be in the cache).
+    """
+    B, _, Hq, Dk = q.shape
+    KVH = k_cache.shape[2]
+    scale = scale if scale is not None else Dk ** -0.5
+    qh = _split_heads(q * jnp.asarray(scale, q.dtype), KVH)   # (B,KVH,G,1,D)
+    kh = k_cache.transpose(0, 2, 1, 3)                        # (B,KVH,C,D)
+    vh = v_cache.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, kh,
+                   preferred_element_type=jnp.float32)
+    valid = cache_positions <= pos
+    if window is not None:
+        valid &= pos - cache_positions < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vh.dtype), vh,
+                   preferred_element_type=jnp.float32)
+    return _merge_heads(o).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, impl="auto",
+              kv_block=512, q_block=512, scale=None,
+              score_dtype=jnp.float32):
+    """Dispatcher used by model blocks (self-attention, S_q == S_kv)."""
+    if impl == "auto":
+        impl = "banded" if (window is not None and window < q.shape[1]) \
+            else "blockwise"
+    if impl == "banded":
+        assert window is not None
+        return attention_banded(q, k, v, window=window, q_block=q_block,
+                                scale=scale, score_dtype=score_dtype)
+    return attention_blockwise(q, k, v, causal=causal, window=window,
+                               kv_block=kv_block, scale=scale,
+                               score_dtype=score_dtype)
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, scale=None):
+    """Naive O(S²)-memory oracle (tests only — small shapes)."""
+    B, S, Hq, Dk = q.shape
+    KVH = k.shape[2]
+    scale = scale if scale is not None else Dk ** -0.5
+    qh = _split_heads(q * jnp.asarray(scale, q.dtype), KVH)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh, k.transpose(0, 2, 1, 3),
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype),
+                   v.transpose(0, 2, 1, 3),
+                   preferred_element_type=jnp.float32)
+    return _merge_heads(o).astype(q.dtype)

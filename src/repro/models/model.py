@@ -1,0 +1,203 @@
+"""Top-level model: embedding, scan-over-layers stack, loss, prefill, decode.
+
+Parameters are layer-stacked (every block leaf gets a leading ``n_layers``
+dim) and applied with ``lax.scan`` so the HLO stays O(1) in depth — critical
+for 62-layer models compiled for 512 SPMD devices. Rematerialization policy
+is applied to the scanned block body.
+
+The LM head / CE loss is computed *chunked over the sequence* so the full
+(B, S, V) logits tensor is never materialized (vocab up to 256k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain
+from .blocks import apply_block, decode_block, init_block, init_layer_cache
+from .config import ModelConfig
+from .layers import dense, rms_norm, trunc_normal
+
+LOSS_CHUNK = 512
+
+
+# ------------------------------------------------------------------- params
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    Vp = padded_vocab(cfg)
+    params = {
+        "embed": trunc_normal(k_embed, (Vp, cfg.d_model), 1.0, dt),
+        "blocks": jax.vmap(lambda k: init_block(cfg, k))(
+            jax.random.split(k_blocks, cfg.n_layers)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = trunc_normal(k_head, (cfg.d_model, Vp),
+                                         cfg.d_model ** -0.5, dt)
+    return params
+
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 256) -> int:
+    """Vocab padded for clean TP sharding (standard MaxText-style trick);
+    logits for padding ids are masked to -inf in the loss."""
+    return -(-cfg.vocab // multiple) * multiple
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Abstract (ShapeDtypeStruct) params — used by the dry-run."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ helpers
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if cfg.remat == "outputs":
+        # save only the post-collective block outputs: backward never
+        # re-executes the forward TP psums / SP gathers
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "block_out"))
+    return jax.checkpoint(fn)      # "nothing": save only block boundaries
+
+
+def embed_tokens(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                 prefix_embeds: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        .astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embeds is not None:
+        # modality stub: precomputed patch/frame embeddings occupy the first
+        # n_prefix positions (assignment: frontend is a stub).
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate(
+            [prefix_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    return x
+
+
+def backbone(cfg: ModelConfig, params: Dict, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Apply all blocks. Returns (hidden, aux_loss_sum)."""
+
+    def layer(carry, p):
+        h, aux = carry
+        h, a, _ = apply_block(cfg, p, h, positions)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_remat(cfg, layer),
+                               (x, jnp.float32(0.0)), params["blocks"])
+    return rms_norm(x, params["final_norm"], cfg.rms_eps), aux
+
+
+def lm_head_weight(cfg: ModelConfig, params: Dict) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ------------------------------------------------------------------- train
+def token_loss(cfg: ModelConfig, params: Dict, hidden: jax.Array,
+               labels: jax.Array, mask: jax.Array) -> jax.Array:
+    """Chunked cross-entropy: never materializes (B, S, V) logits."""
+    B, S, d = hidden.shape
+    W = lm_head_weight(cfg, params)
+    Vp = W.shape[-1]
+    chunk = min(LOSS_CHUNK, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    hc = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+    vocab_ok = jnp.arange(Vp) < cfg.vocab        # mask padded vocab ids
+
+    @jax.checkpoint       # logits are recomputed in backward, never stored
+    def chunk_loss(carry, inp):
+        h, l, m = inp
+        logits = dense(h, W).astype(jnp.dtype(cfg.logit_dtype))
+        logits = constrain(logits, "logits_chunk")
+        logits = jnp.where(vocab_ok[None, None], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        ce = (lse - picked) * m
+        return (carry[0] + ce.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32,
+    optional prefix_embeds (B,P,d)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = embed_tokens(cfg, params, tokens, batch.get("prefix_embeds"))
+    hidden, aux = backbone(cfg, params, x, positions)
+    ce = token_loss(cfg, params, hidden, batch["labels"], batch["mask"])
+    loss = ce + cfg.router_aux_coef * aux / max(cfg.n_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------- serve
+def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None
+            ) -> Tuple[Dict, jax.Array]:
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (cache pytree stacked over layers, last-position logits (B, V)).
+    """
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = embed_tokens(cfg, params, tokens, prefix_embeds)
+
+    def layer(carry, p):
+        h, aux = carry
+        h, a, cache = apply_block(cfg, p, h, positions, collect_cache=True)
+        return (h, aux + a), cache
+
+    (x, _), caches = jax.lax.scan(_remat(cfg, layer),
+                                  (x, jnp.float32(0.0)), params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = dense(x[:, -1], lm_head_weight(cfg, params)) \
+        .astype(jnp.dtype(cfg.logit_dtype))
+    return caches, logits[:, :cfg.vocab] if padded_vocab(cfg) != cfg.vocab \
+        else logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Zeroed decode cache stacked over layers."""
+    one = init_layer_cache(cfg, batch, cfg.cache_len(cache_len))
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache, tokens: jax.Array,
+                pos: jax.Array) -> Tuple[Any, jax.Array]:
+    """One decode step. tokens: (B,) int32; pos: scalar int32 (the position
+    being generated, whose K/V enter the cache). Returns (cache', logits)."""
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        .astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def layer(x_t, inp):
+        p, c = inp
+        c, x_t = decode_block(cfg, p, c, x_t, pos)
+        return x_t, c
+
+    x, new_cache = jax.lax.scan(layer, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = dense(x, lm_head_weight(cfg, params)) \
+        .astype(jnp.dtype(cfg.logit_dtype))
+    return new_cache, logits

@@ -1,0 +1,87 @@
+"""AdamW with f32 master weights — production mixed-precision setup.
+
+Params live in bf16 (compute); the optimizer carries an f32 master copy and
+f32 moments. With ZeRO-1 the master/m/v trees are sharded over the DP axes
+(see sharding.rules.opt_specs) so their memory is amortized across replicas.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) *
+                         0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    # copy=True: an f32 param leaf must NOT alias its master (both trees
+    # are donated by the train step; aliased buffers break donation)
+    f32 = lambda t: jax.tree.map(
+        lambda a: jnp.array(a, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return {"step": jnp.zeros((), jnp.int32), "master": f32(params),
+            "m": zeros(params), "v": zeros(params)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a.astype(jnp.float32)))
+                        for a in jax.tree.leaves(tree)))
+
+
+def apply_update(cfg: AdamWConfig, params, opt_state, grads
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(master, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / bc1, v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) +
+                                    cfg.weight_decay * master)
+        return new_master, m, v
+
+    flat_m, treedef = jax.tree.flatten(opt_state["master"])
+    flat_mm = jax.tree.leaves(opt_state["m"])
+    flat_vv = jax.tree.leaves(opt_state["v"])
+    flat_g = jax.tree.leaves(grads)
+    outs = [upd(a, b, c, g) for a, b, c, g in
+            zip(flat_m, flat_mm, flat_vv, flat_g)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                              new_master, params)
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

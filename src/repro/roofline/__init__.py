@@ -1,0 +1,5 @@
+from .analyze import (HW, CellResult, analyze_compiled, collective_bytes,
+                      roofline_terms)
+
+__all__ = ["HW", "CellResult", "analyze_compiled", "collective_bytes",
+           "roofline_terms"]

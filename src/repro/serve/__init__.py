@@ -1,0 +1,3 @@
+from .engine import Engine, GenerationResult
+
+__all__ = ["Engine", "GenerationResult"]

@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill once, decode step-by-step.
+
+Single-host convenience wrapper over models.prefill / models.decode_step
+(the production path jits the same functions through train.make_*_step with
+mesh shardings — see launch/serve.py). Supports greedy and temperature
+sampling, per-sequence stop tokens, and batched requests padded to a
+common length.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, steps)
+    logits_last: np.ndarray
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(lambda p, t: prefill(cfg, p, t))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+
+    def generate(self, prompts: np.ndarray, steps: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 stop_token: Optional[int] = None) -> GenerationResult:
+        """prompts: (B, S) int32 (right-aligned, no padding support needed
+        for fixed-length synthetic prompts)."""
+        B, S = prompts.shape
+        assert S + steps <= self.max_len or self.cfg.window, \
+            "prompt + steps exceeds cache"
+        cache = init_cache(self.cfg, B, self.max_len)
+        # prefill builds a cache sized cache_len(S); splice it into the
+        # full-size decode cache ring-consistently
+        pf_cache, logits = self._prefill(self.params, jnp.asarray(prompts))
+        cache = self._splice(cache, pf_cache, S)
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((B, steps), np.int32)
+        logits_np = None
+        tok = self._sample(logits, temperature, key)
+        for i in range(steps):
+            out[:, i] = np.asarray(tok)
+            cache, logits = self._decode(self.params, cache, tok,
+                                         jnp.int32(S + i))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+            if stop_token is not None and bool((out[:, i] == stop_token).all()):
+                out = out[:, :i + 1]
+                break
+        logits_np = np.asarray(logits)
+        return GenerationResult(tokens=out, logits_last=logits_np)
+
+    def _sample(self, logits, temperature: float, key):
+        logits = logits[..., :self.cfg.vocab]
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1) \
+            .astype(jnp.int32)
+
+    def _splice(self, cache, pf_cache, S: int):
+        """Insert prefill cache (length C_pf, ring layout) into the decode
+        cache (length C_full) preserving slot = pos % C semantics."""
+        def one(full, pf):
+            if full.shape == pf.shape:
+                return pf            # ssm states / same-length caches
+            C_full, C_pf = full.shape[2], pf.shape[2]
+            # prefill ring holds positions S-C_pf..S-1 at slot pos % C_pf;
+            # unroll to chronological then place at pos % C_full.
+            start = S - C_pf
+            idx = (start + np.arange(C_pf)) % C_pf        # chronological
+            chron = jnp.take(pf, jnp.asarray(idx), axis=2)
+            slots = (start + np.arange(C_pf)) % C_full
+            return full.at[:, :, jnp.asarray(slots)].set(chron)
+        return jax.tree.map(one, cache, pf_cache)

@@ -1,0 +1,6 @@
+from .ctx import activation_ctx, constrain
+from .rules import (Recipe, batch_specs, cache_specs, opt_specs, param_specs_tree,
+                    recipe_for)
+
+__all__ = ["activation_ctx", "constrain", "Recipe", "batch_specs",
+           "cache_specs", "opt_specs", "param_specs_tree", "recipe_for"]

@@ -1,0 +1,4 @@
+from .step import TrainConfig, make_decode_step, make_prefill_step, make_train_step
+
+__all__ = ["TrainConfig", "make_decode_step", "make_prefill_step",
+           "make_train_step"]

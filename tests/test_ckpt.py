@@ -1,0 +1,119 @@
+"""CheckpointManager: full vs incremental saves, restore, async, GC."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, CheckpointPolicy
+from repro.ckpt.manager import flatten_tree, unflatten_tree
+
+
+def tiny_state(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    params = {"embed": jax.random.normal(ks[0], (64, 8), jnp.float32),
+              "blocks": {"w": jax.random.normal(ks[1], (4, 8, 8))},
+              "final_norm": jnp.ones((8,))}
+    opt = {"step": jnp.int32(0),
+           "m": jax.tree.map(lambda a: jnp.zeros_like(a), params)}
+    return params, opt
+
+
+def test_flatten_roundtrip():
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    flat = flatten_tree(params)
+    back = unflatten_tree(flat)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: np.array_equal(np.asarray(a), np.asarray(b)),
+        params, back))
+
+
+def policy(**kw):
+    defaults = dict(every_steps=1, keep=3, incremental=True,
+                    async_write=False, chunk_bytes=256)
+    defaults.update(kw)
+    return CheckpointPolicy(**defaults)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy())
+    mgr.save(10, params, opt)
+    out = mgr.restore()
+    assert out is not None
+    p2, o2, step = out
+    assert step == 10
+    assert np.array_equal(np.asarray(p2["embed"]), np.asarray(params["embed"]))
+    assert np.array_equal(np.asarray(o2["m"]["blocks"]["w"]),
+                          np.asarray(opt["m"]["blocks"]["w"]))
+
+
+def test_incremental_save_is_o_delta(tmp_path):
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy())
+    r1 = mgr.save(0, params, opt)
+    # change one small slice of one tensor
+    params2 = jax.tree.map(lambda a: a, params)
+    params2["blocks"] = {"w": params["blocks"]["w"].at[0, 0, 0].add(1.0)}
+    r2 = mgr.save(1, params2, opt)
+    # blocks layer + opt layer (its embedded step counter changed)
+    assert 1 <= r2.layers_injected <= 2
+    assert r2.bytes_serialized < r1.bytes_serialized / 5
+    p3, _, step = mgr.restore()
+    assert step == 1
+    assert np.array_equal(np.asarray(p3["blocks"]["w"]),
+                          np.asarray(params2["blocks"]["w"]))
+
+
+def test_unchanged_save_writes_almost_nothing(tmp_path):
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy())
+    mgr.save(0, params, opt)
+    r = mgr.save(1, params, opt)
+    # only the embedded step-counter chunk changes
+    assert r.chunks_written <= 1
+    assert r.bytes_serialized <= 256
+    assert mgr.latest_step() == 1        # still committed as a new tag
+
+
+def test_async_save_and_wait(tmp_path):
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy(async_write=True))
+    mgr.save(0, params, opt)
+    rep = mgr.wait()
+    assert rep is not None
+    assert mgr.latest_step() == 0
+
+
+def test_gc_keeps_k(tmp_path):
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy(keep=2))
+    for s in range(5):
+        mgr.save(s, params, opt)
+    tags = [t for t in mgr.store.list_tags("ckpt") if t.startswith("step-")]
+    assert len(tags) == 2
+    assert mgr.latest_step() == 4
+
+
+def test_structure_change_falls_back_to_full(tmp_path):
+    """'Compiled' case: tree structure changes -> rebuild, not inject."""
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy())
+    mgr.save(0, params, opt)
+    params2 = dict(params)
+    params2["extra"] = jnp.ones((16,))    # new leaf = structure change
+    mgr.save(1, params2, opt)
+    p3, _, _ = mgr.restore()
+    assert "extra" in p3
+
+
+def test_fingerprint_mode_equivalent(tmp_path):
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny",
+                            policy(use_fingerprints=True))
+    mgr.save(0, params, opt)
+    params2 = jax.tree.map(lambda a: a, params)
+    params2["embed"] = params["embed"].at[5, 2].add(3.0)
+    mgr.save(1, params2, opt)
+    p3, _, _ = mgr.restore()
+    assert np.array_equal(np.asarray(p3["embed"]),
+                          np.asarray(params2["embed"]))

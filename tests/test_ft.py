@@ -1,0 +1,124 @@
+"""Fault tolerance: crash atomicity, restart-resume, straggler, watchdog."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, CheckpointPolicy
+from repro.ft import DeadlineSkipper, Watchdog, shrink_mesh_shape
+
+
+def tiny_state(key):
+    params = {"w": jax.random.normal(key, (32, 32))}
+    opt = {"m": jax.tree.map(jnp.zeros_like, params)}
+    return params, opt
+
+
+def test_crash_mid_save_preserves_previous(tmp_path):
+    """A save that dies before manifest commit leaves the old ckpt valid."""
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    pol = CheckpointPolicy(incremental=False, async_write=False,
+                           chunk_bytes=128)
+    mgr = CheckpointManager(str(tmp_path), "t", pol)
+    mgr.save(0, params, opt)
+
+    class Boom(RuntimeError):
+        pass
+
+    # simulate crash: a provider that writes some blobs then raises —
+    # build_image dies before write_image (the manifest commit point).
+    # params changed => fall-through reaches the dying RUN provider.
+    params2 = {"w": params["w"] + 1.0}
+    payloads = mgr._payloads(params2, opt, 1)
+    from repro.core import Instruction
+    ins = mgr._instructions()
+
+    def dying_provider():
+        raise Boom()
+
+    providers = {k: (lambda v=v: v) for k, v in payloads.items()}
+    providers["opt_state"] = dying_provider
+    with pytest.raises(Boom):
+        mgr.store.build_image("ckpt", mgr.tag_of(1), ins, providers,
+                              parent=("ckpt", mgr.tag_of(0)))
+    # previous checkpoint untouched & valid
+    assert mgr.latest_step() == 0
+    assert mgr.store.verify_image("ckpt", mgr.tag_of(0)) == []
+    out = mgr.restore()
+    assert out is not None and out[2] == 0
+
+
+def test_restart_resume_bitwise(tmp_path):
+    """Save -> new manager (fresh process analogue) -> restore bitwise."""
+    params, opt = tiny_state(jax.random.PRNGKey(1))
+    mgr = CheckpointManager(str(tmp_path), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=128))
+    mgr.save(7, params, opt)
+    mgr2 = CheckpointManager(str(tmp_path), "t",
+                             CheckpointPolicy(async_write=False,
+                                              chunk_bytes=128))
+    p2, o2, step = mgr2.restore()
+    assert step == 7
+    assert np.array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+
+
+def test_straggler_skip_and_cordon():
+    sk = DeadlineSkipper(n_hosts=4, factor=2.0, cordon_after=2)
+    # host 3 is persistently 10x slower
+    for _ in range(3):
+        inc = sk.decide({0: 1.0, 1: 1.1, 2: 0.9, 3: 10.0})
+    assert inc[0] and inc[1] and inc[2] and not inc[3]
+    assert 3 in sk.stats.cordoned
+    w = sk.contribution_weights(inc)
+    assert w[3] == 0.0
+    assert w[0] == pytest.approx(4 / 3)
+
+
+def test_straggler_recovers():
+    sk = DeadlineSkipper(n_hosts=2, factor=2.0, cordon_after=5)
+    sk.decide({0: 1.0, 1: 5.0})
+    inc = sk.decide({0: 1.0, 1: 1.0})
+    assert inc[1]
+    assert sk.consecutive[1] == 0
+
+
+def test_watchdog_fires_and_disarms():
+    fired = []
+    wd = Watchdog(0.05, lambda: fired.append(1))
+    wd.arm()
+    time.sleep(0.15)
+    assert fired == [1]
+    wd2 = Watchdog(0.2, lambda: fired.append(2))
+    with wd2:
+        time.sleep(0.02)
+    time.sleep(0.25)
+    assert fired == [1]                  # disarmed in time
+
+
+def test_shrink_mesh_shape():
+    assert shrink_mesh_shape(256, model=16) == (16, 16)
+    assert shrink_mesh_shape(240, model=16) == (15, 16)
+    assert shrink_mesh_shape(512, model=16, pods=2) == (2, 16, 16)
+    assert shrink_mesh_shape(8, model=16) == (1, 16)   # degenerate floor
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint saved 'on' one layout restores onto another (values equal)."""
+    from repro.ckpt import reshard_restore
+    params, opt = tiny_state(jax.random.PRNGKey(2))
+    mgr = CheckpointManager(str(tmp_path), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=128))
+    mgr.save(3, params, opt)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    out = reshard_restore(mgr, mesh, {"w": P()}, None)
+    assert out is not None
+    p2, o2, step = out
+    assert step == 3
+    assert np.array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))

@@ -1,0 +1,121 @@
+"""The paper's injection method (C1-C4): equivalence, integrity, registry."""
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, PushRejected,
+                        StructureChangeError, diff_layer_host, inject_image,
+                        inject_payload_update, push)
+
+
+def mk(tmp_path, name="store"):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "src", "content"),
+    Instruction("RUN", "build", "content", derives_from=["src"]),
+    Instruction("RUN", "deps", "content"),            # independent of src
+    Instruction("CMD", "run", "config"),
+]
+
+
+def make_payloads(rng):
+    src = {"a.py": rng.standard_normal(1000).astype(np.float32),
+           "b.py": rng.standard_normal(500).astype(np.float32)}
+    build = {"bin": (src["a.py"] * 2 + 1)}            # derived from src
+    deps = {"lib": rng.standard_normal(4000).astype(np.float32)}
+    return src, build, deps
+
+
+def build_v1(store, rng):
+    src, build, deps = make_payloads(rng)
+    prov = {"src": lambda: src, "build": lambda: build,
+            "deps": lambda: deps}
+    store.build_image("app", "v1", INS, prov)
+    return src, build, deps
+
+
+def test_injection_equals_rebuild(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    src2 = {k: v.copy() for k, v in src.items()}
+    src2["b.py"][3] = 42.0                           # 1-chunk "interpreted" edit
+    build2 = {"bin": src2["a.py"] * 2 + 1}           # unchanged (a.py same)
+    m, c, rep = inject_payload_update(
+        store, "app", "v1", "v2", {"src": src2},
+        providers={"build": lambda: build2, "deps": lambda: deps})
+    assert store.verify_image("app", "v2") == []
+    loaded = store.load_image_payload("app", "v2")
+    assert np.array_equal(loaded["b.py"], src2["b.py"])
+    assert np.array_equal(loaded["lib"], deps["lib"])
+    # O(delta): exactly one chunk rewritten, deps layer NOT re-derived
+    assert rep.chunks_written == 1
+    assert rep.derivations_run == 1      # only `build` (derives_from=src)
+    assert rep.layers_rekeyed >= 1       # deps re-keyed, not rebuilt
+
+
+def test_clone_before_inject_preserves_old_image(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    before = store.load_image_payload("app", "v1")
+    src2 = {k: v.copy() for k, v in src.items()}
+    src2["a.py"][0] = -1.0
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"build": lambda: {"bin": src2["a.py"] * 2 + 1}})
+    after = store.load_image_payload("app", "v1")
+    for k in before:
+        assert np.array_equal(before[k], after[k]), k   # C4: untouched
+    assert store.verify_image("app", "v1") == []
+    # layer ids diverged (new identity for the patched layer)
+    m1, _ = store.read_image("app", "v1")
+    m2, _ = store.read_image("app", "v2")
+    assert m1.layer_ids[1] != m2.layer_ids[1]
+    assert m1.layer_ids[0] == m2.layer_ids[0]           # FROM layer shared
+
+
+def test_structure_change_rejected(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    src2 = dict(src)
+    src2["c.py"] = np.ones(10, np.float32)              # new file => compiled
+    with pytest.raises(StructureChangeError):
+        inject_payload_update(store, "app", "v1", "v2", {"src": src2})
+
+
+def test_registry_accepts_injected_rejects_mutated(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push(store, remote, "app", "v1")
+    # injected image pushes cleanly (new layer id)
+    src2 = {k: v.copy() for k, v in src.items()}
+    src2["b.py"][0] = 9.0
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"build": lambda: build})
+    stats = push(store, remote, "app", "v2")
+    assert stats.layers_dedup >= 1       # shared layers not resent
+    # in-place mutation WITHOUT new id (naive bypass) must be rejected
+    m, _ = store.read_image("app", "v1")
+    layer = store.read_layer(m.layer_ids[1])
+    from repro.core.inject import apply_edits
+    from repro.core.store import BuildReport
+    d = diff_layer_host(layer, {**src, "b.py": src2["b.py"]})
+    apply_edits(store, layer, d, BuildReport())         # same id, new content
+    store.write_layer(layer)
+    with pytest.raises(PushRejected):
+        push(store, remote, "app", "v1")
+
+
+def test_config_change_goes_through_normal_path(tmp_path, rng):
+    """Paper: config layers are empty — let Docker handle them."""
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    ins2 = list(INS)
+    ins2[4] = Instruction("CMD", "run --fast", "config")
+    prov = {"src": lambda: src, "build": lambda: build,
+            "deps": lambda: deps}
+    _, _, rep = store.build_image("app", "v2", ins2, prov,
+                                  parent=("app", "v1"))
+    assert rep.layers_built == 1         # just the empty CMD layer
+    assert rep.bytes_serialized == 0 or rep.bytes_serialized < 100

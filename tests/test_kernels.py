@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp/numpy oracles — shape/dtype sweeps in
+interpret mode (the kernel body executes in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fingerprint_chunks_ref
+from repro.kernels.fingerprint.ops import fingerprint
+from repro.kernels.flash_attention.ops import flash_attention, reference
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_reference
+
+
+FA_CASES = [
+    # B, Hq, KVH, S, D, window, qb, kb
+    (2, 4, 2, 128, 64, None, 64, 64),
+    (1, 4, 4, 256, 32, None, 128, 64),
+    (2, 8, 2, 128, 64, 32, 32, 32),
+    (1, 2, 1, 64, 128, None, 64, 64),
+]
+
+
+@pytest.mark.parametrize("B,Hq,KVH,S,D,win,qb,kb", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(B, Hq, KVH, S, D, win, qb, kb, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KVH, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KVH, S, D), dtype)
+    out = flash_attention(q, k, v, window=win, q_block=qb, kv_block=kb,
+                          interpret=True)
+    ref = reference(q, k, v, window=win)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    assert np.abs(np.asarray(out, np.float32) -
+                  np.asarray(ref, np.float32)).max() < tol
+
+
+SSD_CASES = [
+    (2, 64, 3, 8, 1, 16, 16),
+    (1, 128, 4, 16, 2, 8, 32),
+    (2, 64, 4, 8, 4, 16, 64),
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(B, S, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bc = (jax.random.normal(ks[3], (B, S, G, N)) * 0.3).astype(dtype)
+    Cc = (jax.random.normal(ks[4], (B, S, G, N)) * 0.3).astype(dtype)
+    D = jax.random.normal(ks[5], (H,)) * 0.1
+    y, h = ssd(x, dt, A, Bc, Cc, D, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssd_reference(x, dt, A, Bc, Cc, D)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert np.abs(np.asarray(y, np.float32) -
+                  np.asarray(y_ref, np.float32)).max() < tol
+    assert np.abs(np.asarray(h - h_ref)).max() < tol
+
+
+@pytest.mark.parametrize("dtype,n,chunk", [
+    ("float32", 5000, 1024), ("int8", 10000, 512), ("float32", 100, 1024),
+    ("int32", 3000, 256),
+])
+def test_fingerprint_kernel_bit_exact(dtype, n, chunk):
+    rng = np.random.default_rng(0)
+    if dtype in ("int8", "int32"):
+        x = rng.integers(-100, 100, n).astype(dtype)
+    else:
+        x = rng.standard_normal(n).astype(dtype)
+    got = np.asarray(fingerprint(jnp.asarray(x), chunk, interpret=True))
+    ref = fingerprint_chunks_ref(x, chunk)
+    assert np.array_equal(got, ref)
+
+
+def test_fingerprint_kernel_bf16():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(4096), jnp.bfloat16)
+    got = np.asarray(fingerprint(x, 1024, interpret=True))
+    ref = fingerprint_chunks_ref(np.asarray(x), 1024)
+    assert np.array_equal(got, ref)
+
+
+def test_fingerprint_kernel_sensitivity():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(8192).astype(np.float32)
+    y = x.copy()
+    y[5000] += 1e-7
+    fx = np.asarray(fingerprint(jnp.asarray(x), 1024, interpret=True))
+    fy = np.asarray(fingerprint(jnp.asarray(y), 1024, interpret=True))
+    changed = np.nonzero(np.any(fx != fy, axis=-1))[0]
+    assert list(changed) == [5000 * 4 // 1024]

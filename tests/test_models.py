@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants.
+
+For each of the 10 assigned archs: instantiate the reduced config, run one
+forward/train step on CPU, assert output shapes + no NaNs; check
+prefill->decode continuation matches teacher-forced decode-from-scratch
+logits (serving correctness).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          padded_vocab, prefill)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jnp.zeros(
+            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+        batch["mask"] = batch["mask"].at[:, :cfg.n_prefix_embeds].set(0.0)
+    (loss, metrics), grads = jax.jit(
+        lambda p, b: jax.value_and_grad(
+            lambda q: loss_fn(cfg, q, b), has_aux=True)(p))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0.5             # ~ln(vocab) at init
+    gnorms = [float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+              for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms), arch
+    assert sum(gnorms) > 0, f"{arch}: zero gradients"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_equivalence(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe:
+        # capacity drops are batch-composition-dependent, so prefill (routes
+        # T tokens jointly) and decode (routes 1) only agree exactly when
+        # nothing drops — bump capacity for the equivalence check.
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    _, logits_pf = jax.jit(lambda p, t: prefill(cfg, p, t))(params, tokens)
+    cache = init_cache(cfg, B, S + 4)
+    dec = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    for t in range(S):
+        cache, logits_dec = dec(params, cache, tokens[:, t], jnp.int32(t))
+    err = np.abs(np.asarray(logits_pf, np.float32) -
+                 np.asarray(logits_dec[:, :cfg.vocab], np.float32)).max()
+    assert err < 5e-2, f"{arch}: prefill/decode mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_param_count_matches_config(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    # account for vocab padding in the embedding (and tied/untied head)
+    pad = padded_vocab(cfg) - cfg.vocab
+    pad_elems = pad * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    assert actual - pad_elems == cfg.param_count(), arch
+
+
+def test_loss_decreases_tiny_training():
+    """20 steps of AdamW on a tiny dense model must reduce loss."""
+    from repro.optim import AdamWConfig, apply_update, init_opt_state
+    cfg = get_smoke_config("yi-6b").replace(n_layers=2)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = init_opt_state(params)
+    tokens = jax.random.randint(key, (4, 64), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1),
+             "mask": jnp.ones((4, 64), jnp.float32)}
+    acfg = AdamWConfig(peak_lr=3e-3, warmup_steps=2, decay_steps=50,
+                       weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt, _ = apply_update(acfg, params, opt, grads)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(20):
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses

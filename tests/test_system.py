@@ -1,0 +1,165 @@
+"""End-to-end system tests: train + incremental checkpointing + restart
+resume + serving — the paper's technique embedded in a real training loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, CheckpointPolicy
+from repro.configs import get_smoke_config
+from repro.data import SyntheticTokens
+from repro.models import init_params, loss_fn
+from repro.optim import AdamWConfig, apply_update, init_opt_state
+from repro.serve import Engine
+
+
+def make_step(cfg, acfg):
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt, stats = apply_update(acfg, params, opt, grads)
+        return params, opt, loss
+    return step
+
+
+def train(cfg, steps, mgr=None, start_step=0, params=None, opt=None,
+          save_every=5):
+    ds = SyntheticTokens(cfg.vocab, batch=4, seq=32, seed=7)
+    acfg = AdamWConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=100,
+                       weight_decay=0.0)
+    step_fn = make_step(cfg, acfg)
+    if params is None:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+    losses = []
+    for s in range(start_step, steps):
+        b = ds.batch_at(s)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step_fn(params, opt, batch)
+        losses.append(float(loss))
+        if mgr is not None and (s + 1) % save_every == 0:
+            mgr.save(s + 1, params, opt)
+    if mgr is not None:
+        mgr.wait()
+    return params, opt, losses
+
+
+def test_train_ckpt_restart_resumes_bitwise(tmp_path):
+    cfg = get_smoke_config("gemma-2b").replace(n_layers=2)
+    pol = CheckpointPolicy(incremental=True, async_write=False,
+                           chunk_bytes=512)
+    # run A: 10 steps straight
+    pa, oa, la = train(cfg, 10)
+    # run B: 5 steps, "crash", restore, 5 more
+    mgr = CheckpointManager(str(tmp_path), cfg.name, pol)
+    train(cfg, 5, mgr, save_every=5)
+    out = mgr.restore()
+    assert out is not None
+    params_r, opt_r, step_r = out
+    assert step_r == 5
+    params_r = jax.tree.map(jnp.asarray, params_r)
+    opt_r = jax.tree.map(jnp.asarray, opt_r)
+    pb, ob, lb = train(cfg, 10, start_step=5, params=params_r, opt=opt_r)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incremental_ckpt_cost_tracks_change_size(tmp_path):
+    """Adapter-style update (one tensor touched) must checkpoint ~that much."""
+    cfg = get_smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = {"step": jnp.int32(0)}
+    pol = CheckpointPolicy(incremental=True, async_write=False,
+                           chunk_bytes=512)
+    mgr = CheckpointManager(str(tmp_path), cfg.name, pol)
+    mgr.save(0, params, opt)
+    params2 = jax.tree.map(lambda a: a, params)
+    params2["blocks"] = dict(params["blocks"])
+    params2["blocks"]["wq"] = params["blocks"]["wq"] + \
+        jnp.ones_like(params["blocks"]["wq"]) * 1e-2
+    rep = mgr.save(1, params2, opt)
+    total_bytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
+    wq_bytes = np.asarray(params["blocks"]["wq"]).nbytes
+    assert rep.bytes_serialized <= wq_bytes + 2 * pol.chunk_bytes
+    assert rep.bytes_serialized < total_bytes / 10
+
+
+def test_serving_engine_generates():
+    cfg = get_smoke_config("mixtral-8x7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=64)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab))
+    out = eng.generate(prompts, steps=8)
+    assert out.tokens.shape == (2, 8)
+    assert (out.tokens >= 0).all() and (out.tokens < cfg.vocab).all()
+    out2 = eng.generate(prompts, steps=8)      # greedy => deterministic
+    np.testing.assert_array_equal(out.tokens, out2.tokens)
+
+
+def test_engine_matches_teacher_forcing():
+    """Prefill+decode through the Engine == direct decode loop."""
+    cfg = get_smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    from repro.models import decode_step, init_cache
+    B, S = 2, 12
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab))
+    eng = Engine(cfg, params, max_len=32)
+    res = eng.generate(prompts, steps=4)
+    # manual: feed prompts token by token, then greedy decode 4
+    cache = init_cache(cfg, B, 32)
+    dec = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    for t in range(S):
+        cache, logits = dec(params, cache, jnp.asarray(prompts[:, t]),
+                            jnp.int32(t))
+    toks = []
+    tok = jnp.argmax(logits[..., :cfg.vocab], -1).astype(jnp.int32)
+    for i in range(4):
+        toks.append(np.asarray(tok))
+        cache, logits = dec(params, cache, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits[..., :cfg.vocab], -1).astype(jnp.int32)
+    manual = np.stack(toks, 1)
+    np.testing.assert_array_equal(res.tokens, manual)
+
+
+def test_multitenant_dedup_storage(tmp_path):
+    """Two fine-tunes sharing a base dedup their common layers (paper §I)."""
+    cfg = get_smoke_config("gemma-2b")
+    base = init_params(cfg, jax.random.PRNGKey(0))
+    pol = CheckpointPolicy(incremental=True, async_write=False,
+                           chunk_bytes=512)
+    mgr = CheckpointManager(str(tmp_path), cfg.name, pol)
+    mgr.save(0, base, {"step": jnp.int32(0)})
+
+    def store_bytes():
+        import os
+        total = 0
+        for dp, _, fs in os.walk(os.path.join(mgr.store.root, "blobs")):
+            for f in fs:
+                total += os.path.getsize(os.path.join(dp, f))
+        return total
+
+    b0 = store_bytes()
+    pa = dict(base)
+    pa["final_norm"] = base["final_norm"] * 1.01
+    mgr.save(1, pa, {"step": jnp.int32(0)})
+    b1 = store_bytes()
+    pb = dict(base)
+    pb["embed"] = base["embed"].at[0].add(0.1)
+    mgr.save(2, pb, {"step": jnp.int32(0)})
+    b2 = store_bytes()
+    assert b1 - b0 < b0 / 20             # tenant A: tiny delta
+    assert b2 - b1 < b0 / 20             # tenant B: tiny delta
+
+
+def test_data_pipeline_deterministic_restart():
+    ds = SyntheticTokens(vocab=1000, batch=4, seq=16, seed=3)
+    b5a = ds.batch_at(5)
+    ds2 = SyntheticTokens(vocab=1000, batch=4, seq=16, seed=3)
+    b5b = ds2.batch_at(5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    assert not np.array_equal(b5a["tokens"], ds.batch_at(6)["tokens"])
+    np.testing.assert_array_equal(b5a["labels"][:, :-1],
+                                  b5a["tokens"][:, 1:])
