@@ -165,6 +165,17 @@ def scenario_4(chunk_bytes: int) -> Scenario:
     )
 
 
+def many_leaf_tree(n_leaves: int = 128, leaf_elems: int = 8192,
+                   seed: int = 0) -> Dict[str, np.ndarray]:
+    """A 100+-leaf flat state (think per-block transformer params) for the
+    dispatch-bound incremental-save benchmark: per-leaf fingerprinting
+    costs one device dispatch + one D2H transfer per leaf, the packed
+    pipeline one per checkpoint."""
+    rng = np.random.default_rng(seed)
+    return {f"l{i:03d}": rng.standard_normal(leaf_elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
 SCENARIOS = [scenario_1, scenario_2, scenario_3, scenario_4]
 
 

@@ -19,6 +19,22 @@ Two save modes, benchmarked against each other (the paper's comparison):
   (optionally pre-filtered by on-device fingerprints), clone-before-inject,
   chunk-level writes, checksum re-key. Cost O(changed bytes), not O(state).
 
+The fingerprint-mode save is a fused device+host pipeline (the repo's perf
+tentpole; benchmarks/run.py::bench_incremental_save records it):
+
+  1. device   — ``fingerprint_tree_packed``: every leaf's uint32 lanes are
+     packed into ONE buffer and fingerprinted in a single dispatch
+     (``packed_fingerprints=False`` keeps the per-leaf dispatch baseline);
+     only the (total_chunks, 2) table crosses D2H (``BuildReport.bytes_d2h``).
+  2. diff     — fingerprint compare prefilters unchanged chunks
+     (``BuildReport.chunks_prefiltered``); only changed chunk *ranges* are
+     serialized (``tensor_chunk_bytes``) and SHA-256'd on the shared hash
+     pool. Leaves stay device-resident until a range is actually touched.
+  3. store    — chunk blobs are injected clone-before-inject; with
+     ``durability="batch"`` per-chunk fsyncs are deferred to the manifest
+     commit point and issued as one concurrent batch
+     (``BuildReport.fsyncs`` counts the syscalls either way).
+
 Async: serialization of the *diff payload* happens on the caller thread
 (cheap: only changed chunks), blob/manifest writes go to a background
 executor; `wait()` joins. Atomicity: the image manifest rename is the
@@ -39,18 +55,28 @@ import jax
 import numpy as np
 
 from ..core import (BuildReport, Instruction, LayerStore, diff_layer_host,
-                    fingerprint_tree, inject_image)
+                    fingerprint_tree, fingerprint_tree_packed, inject_image)
 from ..core.diff import LayerDiff, diff_layer_fingerprint
 
 
 def flatten_tree(tree, prefix="") -> Dict[str, np.ndarray]:
-    """pytree -> flat {path: ndarray} with '/'-joined keys."""
+    """pytree -> flat {path: array} with '/'-joined keys.
+
+    Leaves are kept AS-IS (device arrays stay on device): forcing
+    ``np.asarray`` here would pull the entire checkpoint over the host link
+    on every save — exactly the O(state) transfer the fingerprint prefilter
+    exists to avoid. Serialization (chunker.tensor_to_bytes /
+    tensor_chunk_bytes) converts lazily, and with fingerprints enabled only
+    the *changed* tensors' bytes ever cross D2H.
+    """
     out: Dict[str, np.ndarray] = {}
 
     def walk(t, path):
         if isinstance(t, dict):
             for k2 in sorted(t.keys()):
                 walk(t[k2], f"{path}/{k2}" if path else k2)
+        elif hasattr(t, "dtype") and hasattr(t, "shape"):
+            out[path] = t
         else:
             out[path] = np.asarray(t)
 
@@ -75,8 +101,13 @@ class CheckpointPolicy:
     keep: int = 3
     incremental: bool = True          # the paper's technique (vs baseline)
     use_fingerprints: bool = False    # on-device change detection
+    packed_fingerprints: bool = True  # ONE dispatch for the whole tree
+                                      # (False = per-leaf dispatch baseline)
     async_write: bool = True
     chunk_bytes: int = 1 << 20
+    durability: str = "full"          # "batch" defers per-chunk fsyncs to
+                                      # one concurrent flush at the
+                                      # manifest commit point
 
 
 class CheckpointManager:
@@ -85,7 +116,8 @@ class CheckpointManager:
     def __init__(self, root: str, arch: str,
                  policy: Optional[CheckpointPolicy] = None):
         self.policy = policy or CheckpointPolicy()
-        self.store = LayerStore(root, chunk_bytes=self.policy.chunk_bytes)
+        self.store = LayerStore(root, chunk_bytes=self.policy.chunk_bytes,
+                                durability=self.policy.durability)
         self.arch = arch
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[Future] = None
@@ -148,8 +180,29 @@ class CheckpointManager:
         self.last_report = report
         return report
 
+    def _compute_fps(self, payloads: Dict[str, Dict[str, np.ndarray]],
+                     stats: dict) -> Dict[str, np.ndarray]:
+        """Fingerprint every tensor of the checkpoint. Packed mode issues
+        ONE fused device dispatch + one D2H transfer for the whole tree
+        (core.fingerprint.fingerprint_tree_packed); per-leaf mode is the
+        dispatch-per-tensor baseline kept for benchmarking."""
+        union: Dict[str, np.ndarray] = {}
+        for tree in payloads.values():
+            union.update(tree)
+        if self.policy.packed_fingerprints:
+            return fingerprint_tree_packed(union, self.policy.chunk_bytes,
+                                           stats=stats)
+        fps = fingerprint_tree(union, self.policy.chunk_bytes)
+        stats["bytes_d2h"] = stats.get("bytes_d2h", 0) + \
+            sum(v.nbytes for v in fps.values())
+        stats["device_dispatches"] = stats.get("device_dispatches", 0) + \
+            len(fps)
+        return fps
+
     def _save_full(self, step: int,
-                   payloads: Dict[str, Dict[str, np.ndarray]]) -> BuildReport:
+                   payloads: Dict[str, Dict[str, np.ndarray]],
+                   fps: Optional[Dict[str, np.ndarray]] = None
+                   ) -> BuildReport:
         prev = self.latest_step()
         parent = (self.IMAGE, self.tag_of(prev)) if prev is not None else None
         providers = {k: (lambda p=v: p) for k, v in payloads.items()}
@@ -158,6 +211,12 @@ class CheckpointManager:
         _, _, report = self.store.build_image(
             self.IMAGE, self.tag_of(step), ins, providers, parent=parent,
             arch=self.arch)
+        if self.policy.use_fingerprints:
+            # bootstrap the change detector for the NEXT incremental save
+            stats: dict = {}
+            self._last_fps = fps if fps is not None else \
+                self._compute_fps(payloads, stats)
+            report.bytes_d2h += stats.get("bytes_d2h", 0)
         self._gc()
         return report
 
@@ -167,8 +226,11 @@ class CheckpointManager:
         """The paper's injection path (C1-C4)."""
         prev = self.latest_step()
         manifest, _ = self.store.read_image(self.IMAGE, self.tag_of(prev))
-        diffs: Dict[str, LayerDiff] = {}
+        stats: dict = {}
         new_fps: Dict[str, np.ndarray] = {}
+        if self.policy.use_fingerprints:
+            new_fps = self._compute_fps(payloads, stats)
+        diffs: Dict[str, LayerDiff] = {}
         for lid in manifest.layer_ids:
             layer = self.store.read_layer(lid)
             if layer.empty:
@@ -176,12 +238,9 @@ class CheckpointManager:
             key = layer.instruction.arg
             if key not in payloads:
                 continue
-            if self.policy.use_fingerprints and self._last_fps:
-                fps = fingerprint_tree(payloads[key],
-                                       self.policy.chunk_bytes)
+            if self.policy.use_fingerprints:
                 d = diff_layer_fingerprint(layer, payloads[key],
-                                           self._last_fps, fps)
-                new_fps.update(fps)
+                                           self._last_fps, new_fps)
             else:
                 d = diff_layer_host(layer, payloads[key])
             if not d.is_empty:
@@ -193,7 +252,9 @@ class CheckpointManager:
                 providers={k: (lambda p=v: p) for k, v in payloads.items()})
         except Exception:
             # structure changed ("compiled" case) -> rebuild fall-back
-            report = self._save_full(step, payloads)
+            report = self._save_full(step, payloads,
+                                     fps=new_fps if new_fps else None)
+        report.bytes_d2h += stats.get("bytes_d2h", 0)
         if self.policy.use_fingerprints:
             self._last_fps = new_fps or self._last_fps
         self._gc()

@@ -4,11 +4,14 @@ injection method"), checksum re-keying, clone-before-inject, dedup and a
 verifying registry — Docker's layer system re-built for JAX training state.
 """
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, bytes_to_tensor,
-                      chunk_tensor, sha256_hex, tensor_to_bytes)
+                      chunk_tensor, hash_chunks, iter_chunks, sha256_hex,
+                      tensor_chunk_bytes, tensor_to_bytes)
 from .diff import (ChunkEdit, LayerDiff, diff_layer_fingerprint,
                    diff_layer_host, locate_changed_layers)
-from .fingerprint import (fingerprint_chunks, fingerprint_chunks_ref,
-                          fingerprint_tree)
+from .fingerprint import (chunk_geometry, fingerprint_chunks,
+                          fingerprint_chunks_ref, fingerprint_tree,
+                          fingerprint_tree_packed, fingerprint_tree_ref,
+                          tree_pack_index)
 from .inject import (StructureChangeError, apply_edits, clone_layer,
                      inject_image, inject_payload_update)
 from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
@@ -18,9 +21,12 @@ from .store import BuildReport, LayerStore
 
 __all__ = [
     "DEFAULT_CHUNK_BYTES", "TensorRecord", "bytes_to_tensor", "chunk_tensor",
-    "sha256_hex", "tensor_to_bytes", "ChunkEdit", "LayerDiff",
+    "hash_chunks", "iter_chunks", "sha256_hex", "tensor_chunk_bytes",
+    "tensor_to_bytes", "ChunkEdit", "LayerDiff",
     "diff_layer_fingerprint", "diff_layer_host", "locate_changed_layers",
-    "fingerprint_chunks", "fingerprint_chunks_ref", "fingerprint_tree",
+    "chunk_geometry", "fingerprint_chunks", "fingerprint_chunks_ref",
+    "fingerprint_tree", "fingerprint_tree_packed", "fingerprint_tree_ref",
+    "tree_pack_index",
     "StructureChangeError", "apply_edits", "clone_layer", "inject_image",
     "inject_payload_update", "ImageConfig", "Instruction", "LayerDescriptor",
     "Manifest", "chain_checksum", "content_checksum", "new_uuid",

@@ -5,20 +5,52 @@ fixed-size chunks. Chunks are the smallest addressable unit of the store —
 the analogue of files inside a Docker ``layer.tar``. The chunk boundary is
 what makes the paper's injection O(delta): an edit touching k chunks costs
 k chunk writes + k hashes, independent of layer size.
+
+Hot-path mechanics (the fused save pipeline, see also core/diff.py):
+
+* ``iter_chunks`` yields zero-copy ``memoryview`` slices — splitting a
+  serialized tensor allocates nothing; bytes are only copied when a chunk
+  is actually written or recorded as an edit.
+* ``hash_chunks`` SHA-256's chunk batches on a shared ``ThreadPoolExecutor``
+  — CPython's hashlib releases the GIL for buffers >= 2 KiB, so hashing a
+  multi-chunk tensor scales across cores.
+* ``tensor_chunk_bytes`` serializes ONE chunk's byte range of a tensor
+  without materializing the whole array — what lets the fingerprint
+  prefilter touch O(changed bytes) instead of O(tensor bytes).
 """
 from __future__ import annotations
 
 import hashlib
+import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB
 
+# Shared hashing pool. hashlib releases the GIL on large buffers, so SHA-256
+# over many chunks parallelizes well; small batches stay on the caller
+# thread to avoid pool dispatch overhead.
+_HASH_POOL_WORKERS = min(8, os.cpu_count() or 1)
+_HASH_POOL = ThreadPoolExecutor(max_workers=_HASH_POOL_WORKERS,
+                                thread_name_prefix="repro-sha")
+_PARALLEL_MIN_BYTES = 1 << 18   # don't fan out tiny batches
 
-def sha256_hex(data: bytes) -> str:
+
+def sha256_hex(data) -> str:
     return hashlib.sha256(data).hexdigest()
+
+
+def hash_chunks(pieces: Sequence) -> List[str]:
+    """SHA-256 a batch of bytes-like chunks, fanning out to the shared pool
+    when the batch is large enough for the GIL release to pay off."""
+    pieces = list(pieces)
+    if len(pieces) > 1 and _HASH_POOL_WORKERS > 1 and \
+            sum(len(p) for p in pieces) >= _PARALLEL_MIN_BYTES:
+        return list(_HASH_POOL.map(sha256_hex, pieces))
+    return [sha256_hex(p) for p in pieces]
 
 
 @dataclass(frozen=True)
@@ -30,6 +62,11 @@ class TensorRecord:
     dtype: str                # numpy dtype string, e.g. "bfloat16"
     chunk_bytes: int
     chunks: Tuple[str, ...]   # sha256 hex of each chunk, in order
+    # Optional per-chunk 64-bit fingerprint sidecar ((xor, sum) int32 pairs,
+    # see core/fingerprint.py). NOT part of the layer content checksum —
+    # purely a cache accelerator: lets build_image's COPY cache check
+    # prefilter instead of re-chunking + re-SHA-ing the whole payload.
+    fp: Optional[Tuple[Tuple[int, int], ...]] = None
 
     @property
     def nbytes(self) -> int:
@@ -37,22 +74,28 @@ class TensorRecord:
         return n * dtype_itemsize(self.dtype)
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "name": self.name,
             "shape": list(self.shape),
             "dtype": self.dtype,
             "chunk_bytes": self.chunk_bytes,
             "chunks": list(self.chunks),
         }
+        if self.fp is not None:
+            d["fp"] = [list(p) for p in self.fp]
+        return d
 
     @staticmethod
     def from_json(d: dict) -> "TensorRecord":
+        fp = d.get("fp")
         return TensorRecord(
             name=d["name"],
             shape=tuple(d["shape"]),
             dtype=d["dtype"],
             chunk_bytes=int(d["chunk_bytes"]),
             chunks=tuple(d["chunks"]),
+            fp=tuple(tuple(int(x) for x in p) for p in fp)
+            if fp is not None else None,
         )
 
 
@@ -93,21 +136,48 @@ def bytes_to_tensor(data: bytes, shape: Tuple[int, ...], dtype: str) -> np.ndarr
     return a.reshape(shape)
 
 
-def iter_chunks(data: bytes, chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Iterator[bytes]:
-    for off in range(0, max(len(data), 1), chunk_bytes):
-        yield data[off:off + chunk_bytes]
+def iter_chunks(data, chunk_bytes: int = DEFAULT_CHUNK_BYTES
+                ) -> Iterator[memoryview]:
+    """Split a bytes-like object into chunk-sized ZERO-COPY memoryviews.
+
+    Byte-identical to slicing ``data`` directly (``bytes(piece)`` recovers
+    the old behavior); the underlying buffer must outlive the views.
+    """
+    mv = memoryview(data)
+    for off in range(0, max(len(mv), 1), chunk_bytes):
+        yield mv[off:off + chunk_bytes]
+
+
+def tensor_chunk_bytes(arr, chunk_idx: int,
+                       chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> bytes:
+    """Serialize ONLY chunk ``chunk_idx`` of a tensor — byte-identical to
+    ``tensor_to_bytes(arr)[chunk_idx*cb:(chunk_idx+1)*cb]`` but copies just
+    that range (itemsize always divides the power-of-two chunk size)."""
+    a = np.asarray(arr)
+    if a.dtype == np.dtype("V2") or str(arr.dtype) == "bfloat16":
+        a = np.asarray(arr).view(np.uint16)
+    itemsize = a.dtype.itemsize
+    if chunk_bytes % itemsize:
+        # pathological chunk size: fall back to the full serialization
+        data = tensor_to_bytes(arr)
+        return bytes(data[chunk_idx * chunk_bytes:(chunk_idx + 1) * chunk_bytes])
+    flat = a.ravel()            # view for contiguous arrays (the norm)
+    epc = chunk_bytes // itemsize
+    seg = flat[chunk_idx * epc:(chunk_idx + 1) * epc]
+    return np.ascontiguousarray(seg).tobytes()
 
 
 def chunk_tensor(name: str, arr, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
-    """-> (TensorRecord, [(sha256, bytes), ...]) for every chunk."""
+    """-> (TensorRecord, [(sha256, memoryview), ...]) for every chunk.
+
+    Chunk payloads are zero-copy views of one serialization buffer; hashing
+    fans out to the shared pool for multi-chunk tensors.
+    """
     dtype = str(arr.dtype)
     data = tensor_to_bytes(arr)
-    pairs: List[Tuple[str, bytes]] = []
-    hashes: List[str] = []
-    for piece in iter_chunks(data, chunk_bytes):
-        h = sha256_hex(piece)
-        hashes.append(h)
-        pairs.append((h, piece))
+    pieces = list(iter_chunks(data, chunk_bytes))
+    hashes = hash_chunks(pieces)
+    pairs: List[Tuple[str, memoryview]] = list(zip(hashes, pieces))
     rec = TensorRecord(
         name=name,
         shape=tuple(int(s) for s in np.shape(arr)),

@@ -20,7 +20,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .chunker import TensorRecord, iter_chunks, sha256_hex, tensor_to_bytes
+from .chunker import (hash_chunks, iter_chunks, tensor_chunk_bytes,
+                      tensor_to_bytes)
 from .manifest import LayerDescriptor
 
 
@@ -39,6 +40,8 @@ class LayerDiff:
     structure_changed: bool = False   # shape/dtype/tree change => "compiled"
     added: List[str] = field(default_factory=list)
     removed: List[str] = field(default_factory=list)
+    chunks_prefiltered: int = 0       # chunks skipped by the fingerprint
+                                      # prefilter (no serialize, no SHA)
 
     @property
     def is_empty(self) -> bool:
@@ -51,6 +54,16 @@ class LayerDiff:
         the artifact (value-only change). Structure changes are 'compiled' —
         the derived artifacts must be rebuilt."""
         return not self.structure_changed
+
+
+def _host_compare_tensor(rec, name: str, arr, diff: LayerDiff) -> None:
+    """Serialize + SHA every chunk of one tensor and record the edits
+    (the non-prefiltered compare, shared by both diff paths)."""
+    data = tensor_to_bytes(arr)
+    pieces = list(iter_chunks(data, rec.chunk_bytes))
+    for i, h in enumerate(hash_chunks(pieces)):
+        if h != rec.chunks[i]:
+            diff.edits.append(ChunkEdit(name, i, h, bytes(pieces[i])))
 
 
 def diff_layer_host(layer: LayerDescriptor,
@@ -69,11 +82,7 @@ def diff_layer_host(layer: LayerDescriptor,
                 str(arr.dtype) != rec.dtype:
             diff.structure_changed = True
             continue
-        data = tensor_to_bytes(arr)
-        for i, piece in enumerate(iter_chunks(data, rec.chunk_bytes)):
-            h = sha256_hex(piece)
-            if h != rec.chunks[i]:
-                diff.edits.append(ChunkEdit(name, i, h, piece))
+        _host_compare_tensor(rec, name, arr, diff)
     return diff
 
 
@@ -83,7 +92,11 @@ def diff_layer_fingerprint(layer: LayerDescriptor,
                            new_fps: Dict[str, np.ndarray]) -> LayerDiff:
     """Fingerprint-prefiltered diff. ``old_fps``/``new_fps`` map tensor name
     -> (n_chunks, 2) int32 fingerprints (from core.fingerprint). Only chunks
-    whose fingerprint changed are serialized + SHA'd.
+    whose fingerprint changed are serialized + SHA'd — and only the changed
+    chunk RANGES of a tensor are serialized (``tensor_chunk_bytes``), never
+    the whole array. Tensors with no recorded old fingerprint fall back to
+    the host SHA compare. ``diff.chunks_prefiltered`` counts the chunks the
+    prefilter proved unchanged (zero serialize/hash cost).
     """
     diff = LayerDiff(layer_id=layer.layer_id)
     by_name = {r.name: r for r in layer.records}
@@ -99,17 +112,28 @@ def diff_layer_fingerprint(layer: LayerDescriptor,
                 str(arr.dtype) != rec.dtype:
             diff.structure_changed = True
             continue
+        if name not in old_fps or name not in new_fps:
+            # no fingerprint history: full host compare for this tensor
+            _host_compare_tensor(rec, name, arr, diff)
+            continue
         fp_old, fp_new = np.asarray(old_fps[name]), np.asarray(new_fps[name])
+        if fp_old.shape[0] != len(rec.chunks) or \
+                fp_new.shape[0] != len(rec.chunks):
+            # fingerprint/record geometry mismatch (e.g. the store was
+            # reopened with a different chunk_bytes): the prefilter is
+            # meaningless — compare every chunk rather than silently
+            # dropping out-of-range indices
+            _host_compare_tensor(rec, name, arr, diff)
+            continue
         changed = np.nonzero(np.any(fp_old != fp_new, axis=-1))[0]
+        diff.chunks_prefiltered += len(rec.chunks) - int(changed.size)
         if changed.size == 0:
             continue
-        data = tensor_to_bytes(arr)       # lazy: only for touched tensors
-        for i in changed.tolist():
-            lo = i * rec.chunk_bytes
-            piece = data[lo:lo + rec.chunk_bytes]
-            h = sha256_hex(piece)
+        idxs = [int(i) for i in changed.tolist()]
+        pieces = [tensor_chunk_bytes(arr, i, rec.chunk_bytes) for i in idxs]
+        for i, piece, h in zip(idxs, pieces, hash_chunks(pieces)):
             if h != rec.chunks[i]:
-                diff.edits.append(ChunkEdit(name, int(i), h, piece))
+                diff.edits.append(ChunkEdit(name, i, h, piece))
     return diff
 
 

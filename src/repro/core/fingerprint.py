@@ -12,17 +12,32 @@ Both reductions (xor, wraparound-add) are associative + commutative, so the
 result is bit-identical under any sharding/layout — required for a
 distributed change detector.
 
+Two granularities:
+
+* ``fingerprint_chunks`` — one tensor per call. Fine for a handful of big
+  arrays, but a real checkpoint has hundreds of pytree leaves and one jitted
+  dispatch + one D2H transfer *per leaf* is dispatch-bound.
+* ``fingerprint_tree_packed`` — the whole checkpoint in ONE dispatch: every
+  leaf's uint32 lanes are packed into a single padded ``(total_chunks,
+  lanes)`` buffer with a host-side index table mapping buffer rows back to
+  ``(tensor, chunk_idx)``. Rows narrower than the widest leaf are masked
+  past their own width, so each row's fingerprint is bit-identical to the
+  per-leaf path. A single ``(total_chunks, 2)`` table (8 B per chunk)
+  crosses the host link.
+
 The Pallas kernel in kernels/fingerprint/ implements the same mix with
 explicit VMEM tiling; this module is the jnp path (and the kernel's oracle).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .chunker import dtype_itemsize
 
 # odd multipliers from splitmix64's constants (truncated to 32-bit, forced odd)
 _C1 = np.uint32(0x9E3779B9)
@@ -50,31 +65,33 @@ def _to_u32_lanes(arr: jax.Array) -> jax.Array:
     return u.astype(jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_bytes",))
-def fingerprint_chunks(arr: jax.Array, chunk_bytes: int = 1 << 20) -> jax.Array:
-    """-> (n_chunks, 2) int32 fingerprints, chunk boundaries matching
-    chunker.iter_chunks on the serialized bytes."""
-    itemsize = jnp.dtype(arr.dtype).itemsize
-    if arr.dtype == jnp.bool_:
-        itemsize = 1
-    lanes_per_elem = max(1, 4 // itemsize) if itemsize < 4 else 1
+def chunk_geometry(shape: Tuple[int, ...], dtype: str,
+                   chunk_bytes: int) -> Tuple[int, int]:
+    """-> (n_chunks, lanes_per_chunk) for a tensor, matching both
+    chunker.iter_chunks boundaries on the serialized bytes and the lane
+    layout produced by ``_to_u32_lanes`` (sub-32-bit dtypes widen to one
+    lane per element; 64-bit dtypes split into two lanes per element)."""
+    itemsize = dtype_itemsize(dtype)
+    lanes_per_elem = 2 if itemsize == 8 else 1
     elems_per_chunk = max(1, chunk_bytes // itemsize)
-    n = arr.size
+    n = 1
+    for s in shape:
+        n *= int(s)
+    if not shape:
+        n = 1
     n_chunks = max(1, -(-n // elems_per_chunk))
+    lanes_per_chunk = elems_per_chunk * lanes_per_elem if n else 1
+    return n_chunks, lanes_per_chunk
 
-    u = _to_u32_lanes(arr)
-    lanes_per_chunk = elems_per_chunk * (u.size // max(n, 1)) if n else 1
-    # derive exactly: lanes per chunk = elems_per_chunk * lanes_per_elem for
-    # sub/equal-32-bit dtypes; for 64-bit dtypes it's elems_per_chunk * 2.
-    lanes_per_chunk = (elems_per_chunk * u.size) // max(n, 1) if n else 1
-    pad = n_chunks * lanes_per_chunk - u.size
-    u = jnp.pad(u, (0, pad))
-    u = u.reshape(n_chunks, lanes_per_chunk)
 
-    pos = jnp.arange(lanes_per_chunk, dtype=jnp.uint32)[None, :]
+def _mix(u: jax.Array, pos: jax.Array) -> jax.Array:
+    """The multiply-xor-shift lane mix (identical in jnp/numpy/Pallas)."""
     mixed = (u * _C1) ^ (pos * _C2 + _C3)
     mixed = mixed ^ (mixed >> 15)
-    mixed = mixed * _C3
+    return mixed * _C3
+
+
+def _reduce_rows(mixed: jax.Array) -> jax.Array:
     fp_xor = jax.lax.reduce(mixed, np.uint32(0),
                             jax.lax.bitwise_xor, dimensions=(1,))
     fp_sum = jnp.sum(mixed, axis=1, dtype=jnp.uint32)
@@ -82,10 +99,146 @@ def fingerprint_chunks(arr: jax.Array, chunk_bytes: int = 1 << 20) -> jax.Array:
     return jax.lax.bitcast_convert_type(out, jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("chunk_bytes",))
+def fingerprint_chunks(arr: jax.Array, chunk_bytes: int = 1 << 20) -> jax.Array:
+    """-> (n_chunks, 2) int32 fingerprints, chunk boundaries matching
+    chunker.iter_chunks on the serialized bytes."""
+    n_chunks, lanes_per_chunk = chunk_geometry(
+        tuple(arr.shape), str(arr.dtype), chunk_bytes)
+    u = _to_u32_lanes(arr)
+    pad = n_chunks * lanes_per_chunk - u.size
+    u = jnp.pad(u, (0, pad))
+    u = u.reshape(n_chunks, lanes_per_chunk)
+    pos = jnp.arange(lanes_per_chunk, dtype=jnp.uint32)[None, :]
+    return _reduce_rows(_mix(u, pos))
+
+
+def _device_lanes_leaf(v):
+    """jnp.asarray that survives disabled x64: 64-bit numpy leaves
+    (arrays AND scalars — np.generic) are bit-viewed as uint32 lanes on
+    the host (jnp.asarray would silently downcast them, making the
+    fingerprint blind to low-order bits of the serialized value). The
+    uint32 view is the exact lane stream ``_to_u32_lanes`` produces."""
+    if isinstance(v, np.generic):
+        v = np.asarray(v)
+    if isinstance(v, np.ndarray) and v.dtype.itemsize == 8 and \
+            v.dtype != np.bool_ and not getattr(jax.config, "jax_enable_x64",
+                                                False):
+        return jnp.asarray(np.ascontiguousarray(v).reshape(-1).view(np.uint32))
+    return jnp.asarray(v)
+
+
 def fingerprint_tree(tree, chunk_bytes: int = 1 << 20) -> Dict[str, np.ndarray]:
-    """Host-side convenience: name->fingerprints for a flat payload dict."""
-    return {name: np.asarray(fingerprint_chunks(jnp.asarray(v), chunk_bytes))
-            for name, v in tree.items()}
+    """Host-side convenience: name->fingerprints for a flat payload dict.
+
+    One device dispatch and one D2H transfer PER LEAF — kept as the
+    dispatch-bound baseline that ``fingerprint_tree_packed`` is benchmarked
+    against (benchmarks/run.py::bench_incremental_save).
+    """
+    out: Dict[str, np.ndarray] = {}
+    for name, v in tree.items():
+        n_chunks, lanes = chunk_geometry(tuple(np.shape(v)), str(v.dtype),
+                                         chunk_bytes)
+        fp = _fingerprint_packed((_device_lanes_leaf(v),),
+                                 ((n_chunks, lanes),), lanes, "jnp", False)
+        out[name] = np.asarray(fp)
+    return out
+
+
+# --------------------------------------------------------------------- packed
+def tree_pack_index(tree, chunk_bytes: int
+                    ) -> Tuple[List[Tuple[str, int, int]], int, int]:
+    """Host-side index table for the packed buffer.
+
+    -> ([(name, row_offset, n_chunks), ...], total_chunks, max_lanes).
+    Row ``row_offset + j`` of the packed buffer holds chunk ``j`` of
+    ``name`` — the map from packed rows back to (tensor, chunk_idx).
+    """
+    index: List[Tuple[str, int, int]] = []
+    row = 0
+    max_lanes = 1
+    for name, v in tree.items():
+        n_chunks, lanes = chunk_geometry(
+            tuple(np.shape(v)), str(v.dtype), chunk_bytes)
+        index.append((name, row, n_chunks))
+        row += n_chunks
+        max_lanes = max(max_lanes, lanes)
+    return index, row, max_lanes
+
+
+def _pack_rows(leaves: Tuple[jax.Array, ...],
+               geom: Tuple[Tuple[int, int], ...],
+               lanes: int) -> Tuple[jax.Array, jax.Array]:
+    """Trace-time packing: (total_chunks, lanes) uint32 buffer + per-row
+    width vector. Rows keep each leaf's OWN zero padding inside its width
+    (bit-identical to the per-leaf path); columns past the width are
+    masked out by the consumer."""
+    rows = []
+    for arr, (n_chunks, w) in zip(leaves, geom):
+        u = _to_u32_lanes(arr)
+        u = jnp.pad(u, (0, n_chunks * w - u.size)).reshape(n_chunks, w)
+        if w < lanes:
+            u = jnp.pad(u, ((0, 0), (0, lanes - w)))
+        rows.append(u)
+    u_all = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+    widths = np.concatenate(
+        [np.full(g[0], g[1], np.int32) for g in geom]) if geom else \
+        np.zeros((0,), np.int32)
+    return u_all, jnp.asarray(widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("geom", "lanes", "backend", "interpret"))
+def _fingerprint_packed(leaves: Tuple[jax.Array, ...],
+                        geom: Tuple[Tuple[int, int], ...],
+                        lanes: int, backend: str, interpret: bool
+                        ) -> jax.Array:
+    u_all, widths = _pack_rows(leaves, geom, lanes)
+    if backend == "pallas":
+        from ..kernels.fingerprint.kernel import fingerprint_lanes
+        return fingerprint_lanes(u_all, widths=widths, interpret=interpret)
+    pos = jnp.arange(lanes, dtype=jnp.uint32)[None, :]
+    mixed = _mix(u_all, pos)
+    mixed = jnp.where(pos < widths.astype(jnp.uint32)[:, None],
+                      mixed, jnp.uint32(0))
+    return _reduce_rows(mixed)
+
+
+def fingerprint_tree_packed(tree, chunk_bytes: int = 1 << 20, *,
+                            backend: str = "jnp", interpret: bool = False,
+                            stats: Optional[dict] = None
+                            ) -> Dict[str, np.ndarray]:
+    """Fingerprint an entire flat payload dict in ONE device dispatch.
+
+    Drop-in replacement for ``fingerprint_tree``: returns the identical
+    name -> (n_chunks, 2) int32 table (bit-for-bit), but issues a single
+    fused jitted computation over a packed ``(total_chunks, max_lanes)``
+    buffer and a single D2H transfer of the ``(total_chunks, 2)`` result,
+    instead of one dispatch + one transfer per pytree leaf.
+
+    ``backend``: "jnp" (XLA, also the CPU path) or "pallas" (the tiled TPU
+    kernel in kernels/fingerprint/; ``interpret=True`` runs it on CPU).
+    ``stats``: optional dict; accumulates "bytes_d2h" (fingerprint-table
+    bytes shipped to host) and "device_dispatches".
+
+    Memory note: leaves are padded to the widest leaf's lane count —
+    mixed-itemsize trees pay up to 4x transient padding on the narrow
+    leaves. Homogeneous checkpoints (the common case) pay only the final
+    ragged chunk per leaf.
+    """
+    if not tree:
+        return {}
+    names = list(tree.keys())
+    index, total_chunks, max_lanes = tree_pack_index(tree, chunk_bytes)
+    leaves = tuple(_device_lanes_leaf(tree[name]) for name in names)
+    geom = tuple(chunk_geometry(tuple(np.shape(tree[n])), str(tree[n].dtype),
+                                chunk_bytes) for n in names)
+    fp_all = np.asarray(_fingerprint_packed(leaves, geom, max_lanes,
+                                            backend, interpret))
+    if stats is not None:
+        stats["bytes_d2h"] = stats.get("bytes_d2h", 0) + fp_all.nbytes
+        stats["device_dispatches"] = stats.get("device_dispatches", 0) + 1
+    return {name: fp_all[off:off + n] for name, off, n in index}
 
 
 def fingerprint_chunks_ref(arr: np.ndarray, chunk_bytes: int = 1 << 20) -> np.ndarray:
@@ -123,3 +276,10 @@ def fingerprint_chunks_ref(arr: np.ndarray, chunk_bytes: int = 1 << 20) -> np.nd
         fp_xor = np.bitwise_xor.reduce(mixed, axis=1)
         fp_sum = np.add.reduce(mixed, axis=1, dtype=np.uint32)
     return np.stack([fp_xor, fp_sum], axis=-1).view(np.int32)
+
+
+def fingerprint_tree_ref(tree, chunk_bytes: int = 1 << 20
+                         ) -> Dict[str, np.ndarray]:
+    """Numpy oracle for a whole flat payload dict (no device round-trip)."""
+    return {name: fingerprint_chunks_ref(np.asarray(v), chunk_bytes)
+            for name, v in tree.items()}

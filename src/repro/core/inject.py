@@ -93,6 +93,7 @@ def inject_image(store: LayerStore,
     """Run the full injection pipeline; ``diffs`` keyed by layer_id."""
     report = BuildReport()
     t0 = time.perf_counter()
+    fsyncs0 = store.fsyncs
     manifest, config = store.read_image(name, tag)
     layers = [store.read_layer(lid) for lid in manifest.layer_ids]
 
@@ -162,6 +163,9 @@ def inject_image(store: LayerStore,
                             layer_ids=[l.layer_id for l in new_layers],
                             config_id=new_config.config_id)
     store.write_image(new_manifest, new_config)
+    report.fsyncs = store.fsyncs - fsyncs0
+    report.chunks_prefiltered = sum(d.chunks_prefiltered
+                                    for d in diffs.values())
     report.wall_seconds = time.perf_counter() - t0
     return new_manifest, new_config, report
 

@@ -17,17 +17,28 @@ makes clone-before-inject (C4) O(#chunk-refs) instead of O(bytes).
 rules of paper §II.A:
   1. identical chain -> skip entirely ("Using cache"),
   2. instruction added/removed/altered -> rebuild that layer,
-  3. COPY/ADD: compare *content* checksum of the new payload,
+  3. COPY/ADD: compare the new payload's *content* against the cached
+     layer — answered by the per-chunk fingerprint sidecar when present
+     (one vectorized pass, ``BuildReport.chunks_prefiltered``; any
+     fingerprint mismatch proves a miss, all-equal is taken as a hit),
+     else by the full re-chunk + re-SHA the real Docker pays,
   4. RUN/CMD/ENV: compare the *literal instruction text* only,
 and the fall-through rule: the first rebuilt layer invalidates every layer
 after it (chain checksums force re-execution of all downstream builds).
+
+I/O accounting: every fsync (file or directory) is counted in
+``LayerStore.fsyncs`` and surfaced per build via ``BuildReport.fsyncs``;
+``durability="batch"`` (see LayerStore) defers per-chunk fsyncs to one
+concurrent flush at the manifest commit point.
 """
 from __future__ import annotations
 
 import io
 import json
 import os
+import re
 import tarfile
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -36,17 +47,50 @@ import numpy as np
 
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, assemble_tensor,
                       chunk_tensor, sha256_hex)
+from .fingerprint import fingerprint_chunks_ref
 from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
                        chain_checksum, content_checksum, dumps, new_uuid)
 
+_HEX_ID = re.compile(r"[0-9a-f]{32}|[0-9a-f]{64}")  # uuid4.hex / sha256 hex
 
-def _atomic_write(path: str, data: bytes) -> None:
+# Directory fsyncs at the batch-durability commit point are independent
+# blocking syscalls — issue them concurrently.
+_IO_POOL_WORKERS = min(4, os.cpu_count() or 1)
+_IO_POOL: Optional[object] = None
+_IO_POOL_LOCK = threading.Lock()
+
+
+def _io_pool():
+    global _IO_POOL
+    with _IO_POOL_LOCK:
+        if _IO_POOL is None:
+            from concurrent.futures import ThreadPoolExecutor
+            _IO_POOL = ThreadPoolExecutor(max_workers=_IO_POOL_WORKERS,
+                                          thread_name_prefix="repro-fsync")
+    return _IO_POOL
+
+
+def _atomic_write(path: str, data, fsync: bool = True) -> None:
     tmp = f"{path}.tmp.{os.getpid()}.{time.monotonic_ns()}"
     with open(tmp, "wb") as f:
         f.write(data)
-        f.flush()
-        os.fsync(f.fileno())
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     os.replace(tmp, path)
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file's data or a directory's entries (missing paths are
+    ignored: a deferred-dirty blob may have been GC'd before commit)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except FileNotFoundError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 @dataclass
@@ -61,22 +105,97 @@ class BuildReport:
     bytes_hashed: int = 0
     chunks_written: int = 0
     derivations_run: int = 0
+    bytes_d2h: int = 0           # device->host traffic (fingerprint tables)
+    chunks_prefiltered: int = 0  # chunks skipped via fingerprint prefilter
+    fsyncs: int = 0              # fsync syscalls issued (files + dirs)
     wall_seconds: float = 0.0
 
+    _COUNTERS = ("layers_built", "layers_cached", "layers_injected",
+                 "layers_rekeyed", "bytes_serialized", "bytes_hashed",
+                 "chunks_written", "derivations_run", "bytes_d2h",
+                 "chunks_prefiltered", "fsyncs")
+
     def merge(self, other: "BuildReport") -> None:
-        for k in ("layers_built", "layers_cached", "layers_injected",
-                  "layers_rekeyed", "bytes_serialized", "bytes_hashed",
-                  "chunks_written", "derivations_run"):
+        for k in self._COUNTERS:
             setattr(self, k, getattr(self, k) + getattr(other, k))
         self.wall_seconds += other.wall_seconds
 
 
 class LayerStore:
-    def __init__(self, root: str, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+    """See module docstring. ``durability``:
+
+    * ``"full"``  — every blob/layer write is fsync'd before it is linked
+      in (the seed behavior; one fsync per chunk).
+    * ``"batch"`` — blob/layer writes skip the inline per-file fsync; at
+      the commit point (``write_image``, before the manifest rename) the
+      dirty FILES are fsync'd concurrently in one deferred batch, then
+      their directories. Durability is equivalent to "full" once the
+      manifest is visible — the fsyncs are deferred and overlapped, not
+      skipped. The manifest rename remains the commit point, so a crash
+      mid-save still leaves the previous image intact.
+
+    ``record_fingerprints`` — store a per-chunk fingerprint sidecar on each
+    TensorRecord at build time (excluded from content checksums), enabling
+    the COPY-cache prefilter in ``build_image``.
+    """
+
+    def __init__(self, root: str, chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 durability: str = "full", record_fingerprints: bool = True):
+        if durability not in ("full", "batch"):
+            raise ValueError(f"unknown durability mode {durability!r}")
         self.root = root
         self.chunk_bytes = chunk_bytes
+        self.durability = durability
+        self.record_fingerprints = record_fingerprints
+        self.fsyncs = 0              # lifetime fsync count (files + dirs)
+        self._dirty_dirs: set = set()
+        self._dirty_files: set = set()
+        # paths this process knows are durable (fsync'd inline or at a
+        # commit). A dedup hit on a path NOT in this set may be a torn
+        # leftover of a crashed batch-mode save — batch mode re-fsyncs it
+        # at the next commit instead of trusting bare existence.
+        self._durable_paths: set = set()
+        self._dirty_lock = threading.Lock()
+        # Layer descriptors are immutable once written (every revision gets
+        # a fresh layer_id), so parsed descriptors are cached: the
+        # incremental save path re-reads every layer of the parent image on
+        # each save, and a 100+-record descriptor costs milliseconds to
+        # re-parse. Bounded FIFO; blobs/manifests are NOT cached.
+        self._layer_cache: "dict[str, LayerDescriptor]" = {}
+        self._layer_cache_cap = 512
         for sub in ("blobs/sha256", "layers", "images"):
             os.makedirs(os.path.join(root, sub), exist_ok=True)
+
+    # ------------------------------------------------------------ durability
+    def _write_file(self, path: str, data) -> None:
+        full = self.durability == "full"
+        _atomic_write(path, data, fsync=full)
+        if full:
+            self.fsyncs += 1
+            self._durable_paths.add(path)
+        else:
+            with self._dirty_lock:
+                self._dirty_files.add(path)
+                self._dirty_dirs.add(os.path.dirname(path))
+
+    def sync_for_commit(self) -> None:
+        """Flush deferred durability: fsync every dirty file's data, then
+        every dirty directory, each batch issued concurrently (independent
+        syscalls — wall time is the slowest sync, not the sum). Called
+        automatically by ``write_image`` (the commit point)."""
+        with self._dirty_lock:
+            files, self._dirty_files = self._dirty_files, set()
+            dirs, self._dirty_dirs = self._dirty_dirs, set()
+        for batch in (sorted(files), sorted(dirs)):
+            if not batch:
+                continue
+            if len(batch) > 1 and _IO_POOL_WORKERS > 1:
+                list(_io_pool().map(_fsync_path, batch))
+            else:
+                for p in batch:
+                    _fsync_path(p)
+            self.fsyncs += len(batch)
+        self._durable_paths.update(files)
 
     # ---------------------------------------------------------------- blobs
     def _blob_path(self, h: str) -> str:
@@ -86,13 +205,20 @@ class LayerStore:
     def has_blob(self, h: str) -> bool:
         return os.path.exists(self._blob_path(h))
 
-    def write_blob(self, h: str, data: bytes) -> bool:
+    def write_blob(self, h: str, data) -> bool:
         """Returns True if a new blob was written (False = dedup hit)."""
         path = self._blob_path(h)
         if os.path.exists(path):
+            if self.durability == "batch" and path not in self._durable_paths:
+                # existence alone doesn't prove durability: this could be
+                # the un-fsynced leftover of a crashed batch-mode save —
+                # re-fsync it at the next commit before referencing it
+                with self._dirty_lock:
+                    self._dirty_files.add(path)
+                    self._dirty_dirs.add(os.path.dirname(path))
             return False
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        _atomic_write(path, data)
+        self._write_file(path, data)
         return True
 
     def read_blob(self, h: str) -> bytes:
@@ -103,13 +229,26 @@ class LayerStore:
     def _layer_path(self, layer_id: str) -> str:
         return os.path.join(self.root, "layers", f"{layer_id}.json")
 
-    def write_layer(self, layer: LayerDescriptor) -> None:
-        _atomic_write(self._layer_path(layer.layer_id),
-                      dumps(layer.to_json()).encode())
+    def _cache_layer(self, layer: LayerDescriptor) -> None:
+        if len(self._layer_cache) >= self._layer_cache_cap:
+            self._layer_cache.pop(next(iter(self._layer_cache)))
+        self._layer_cache[layer.layer_id] = layer
 
-    def read_layer(self, layer_id: str) -> LayerDescriptor:
+    def write_layer(self, layer: LayerDescriptor) -> None:
+        self._write_file(self._layer_path(layer.layer_id),
+                         dumps(layer.to_json()).encode())
+        self._cache_layer(layer)
+
+    def read_layer(self, layer_id: str, use_cache: bool = True
+                   ) -> LayerDescriptor:
+        if use_cache:
+            cached = self._layer_cache.get(layer_id)
+            if cached is not None:
+                return cached
         with open(self._layer_path(layer_id), "rb") as f:
-            return LayerDescriptor.from_json(json.loads(f.read()))
+            layer = LayerDescriptor.from_json(json.loads(f.read()))
+        self._cache_layer(layer)
+        return layer
 
     def has_layer(self, layer_id: str) -> bool:
         return os.path.exists(self._layer_path(layer_id))
@@ -122,11 +261,16 @@ class LayerStore:
 
     def write_image(self, manifest: Manifest, config: ImageConfig) -> None:
         d = self._image_dir(manifest.name)
+        # Commit point: flush any deferred (durability="batch") blob/layer
+        # writes before the manifest becomes visible, then write config +
+        # manifest fully synced regardless of durability mode.
+        self.sync_for_commit()
         _atomic_write(os.path.join(d, f"{config.config_id}.json"),
                       dumps(config.to_json()).encode())
         # Manifest rename is the commit point.
         _atomic_write(os.path.join(d, f"{manifest.tag}.json"),
                       dumps(manifest.to_json()).encode())
+        self.fsyncs += 2
 
     def read_image(self, name: str, tag: str) -> Tuple[Manifest, ImageConfig]:
         d = self._image_dir(name)
@@ -143,9 +287,11 @@ class LayerStore:
         d = os.path.join(self.root, "images", name)
         if not os.path.isdir(d):
             return []
-        return sorted(p[:-5] for p in os.listdir(d)
-                      if p.endswith(".json") and not p.startswith("config-")
-                      and not len(p) == 69)  # skip config blobs (64-hex id)
+        # Skip config blobs explicitly: their filenames are bare hex ids
+        # (32-hex uuid4 / 64-hex sha256), never user tags.
+        return sorted(stem for stem in (p[:-5] for p in os.listdir(d)
+                                        if p.endswith(".json"))
+                      if not _HEX_ID.fullmatch(stem))
 
     # ------------------------------------------------------------ build API
     def build_content_layer(self, instruction: Instruction,
@@ -155,14 +301,24 @@ class LayerStore:
                             family: Optional[str] = None,
                             version: int = 1) -> LayerDescriptor:
         """Full (baseline) layer build: serialize + hash EVERY byte."""
+        import dataclasses
+
         records: List[TensorRecord] = []
         for name in sorted(payload.keys()):
-            rec, pairs = chunk_tensor(name, payload[name], self.chunk_bytes)
+            # one host conversion per tensor (device leaves cross D2H once;
+            # both the chunker and the fingerprint sidecar reuse it)
+            arr = payload[name]
+            arr = arr if isinstance(arr, np.ndarray) else np.asarray(arr)
+            rec, pairs = chunk_tensor(name, arr, self.chunk_bytes)
             for h, piece in pairs:
                 if self.write_blob(h, piece):
                     report.chunks_written += 1
                 report.bytes_hashed += len(piece)
             report.bytes_serialized += rec.nbytes
+            if self.record_fingerprints:
+                fp = fingerprint_chunks_ref(arr, self.chunk_bytes)
+                rec = dataclasses.replace(
+                    rec, fp=tuple((int(a), int(b)) for a, b in fp.tolist()))
             records.append(rec)
         checksum = content_checksum(records)
         lid = new_uuid()     # fresh descriptor identity per revision
@@ -203,6 +359,44 @@ class LayerStore:
         report.layers_built += 1
         return layer
 
+    def _copy_payload_matches(self, prev: LayerDescriptor,
+                              payload: Dict[str, np.ndarray],
+                              report: BuildReport) -> bool:
+        """COPY/ADD cache check. Prefers the per-chunk fingerprint sidecar:
+        any fingerprint mismatch proves the bytes changed (definite cache
+        miss, no hashing at all); all-equal fingerprints are taken as a hit
+        (a 64-bit prefilter — the same collision budget the incremental
+        save path already accepts). Records without a sidecar use the seed
+        behavior: full re-chunk + re-SHA of the payload.
+        """
+        by_name = {r.name: r for r in prev.records}
+        if set(by_name) != set(payload):
+            return False
+        if prev.records and all(r.fp is not None for r in prev.records):
+            candidate_chunks = 0
+            for pname, rec in by_name.items():
+                arr = payload[pname]
+                if tuple(int(s) for s in np.shape(arr)) != rec.shape or \
+                        str(arr.dtype) != rec.dtype:
+                    return False
+                new_fp = fingerprint_chunks_ref(np.asarray(arr),
+                                                rec.chunk_bytes)
+                if tuple((int(a), int(b)) for a, b in new_fp.tolist()) \
+                        != rec.fp:
+                    return False    # definite miss: full rebuild follows
+                candidate_chunks += len(rec.chunks)
+            # only a HIT skipped work — count prefiltered chunks here, not
+            # on the miss path where everything gets re-serialized anyway
+            report.chunks_prefiltered += candidate_chunks
+            return True
+        recs = []
+        for pname in sorted(payload.keys()):
+            rec, pairs = chunk_tensor(pname, payload[pname],
+                                      self.chunk_bytes)
+            report.bytes_hashed += sum(len(p) for _, p in pairs)
+            recs.append(rec)
+        return content_checksum(recs) == prev.checksum
+
     def build_image(self, name: str, tag: str,
                     instructions: Sequence[Instruction],
                     providers: Dict[str, Callable[[], Dict[str, np.ndarray]]],
@@ -218,6 +412,7 @@ class LayerStore:
         """
         report = BuildReport()
         t0 = time.perf_counter()
+        fsyncs0 = self.fsyncs
         parent_layers: List[LayerDescriptor] = []
         if parent is not None and self.has_image(*parent):
             pm, _ = self.read_image(*parent)
@@ -239,18 +434,15 @@ class LayerStore:
                 elif ins.kind == "config":
                     use_cache = True           # DLC rule 4: literal text match
                 elif ins.op in ("COPY", "ADD"):
-                    # DLC rule 3: content checksum of the NEW payload must be
-                    # computed and compared — this costs a full serialize+hash
-                    # of the build context even on a cache HIT. Faithful to
-                    # Docker (and part of why small edits are expensive).
+                    # DLC rule 3: the NEW payload's content must be compared
+                    # against the cached layer. When the cached records
+                    # carry a fingerprint sidecar, a cache HIT costs one
+                    # vectorized fingerprint pass (no chunk copy, no SHA);
+                    # otherwise fall back to the Docker-faithful full
+                    # serialize+hash of the build context.
                     payload = providers[ins.arg]()
-                    recs = []
-                    for pname in sorted(payload.keys()):
-                        rec, pairs = chunk_tensor(pname, payload[pname],
-                                                  self.chunk_bytes)
-                        report.bytes_hashed += sum(len(p) for _, p in pairs)
-                        recs.append(rec)
-                    use_cache = content_checksum(recs) == prev.checksum
+                    use_cache = self._copy_payload_matches(prev, payload,
+                                                           report)
                 else:
                     # RUN: literal text only (rule 4) — Docker does NOT
                     # re-execute to compare outputs.
@@ -296,6 +488,7 @@ class LayerStore:
         manifest = Manifest(name=name, tag=tag, layer_ids=layer_ids,
                             config_id=config.config_id)
         self.write_image(manifest, config)
+        report.fsyncs = self.fsyncs - fsyncs0
         report.wall_seconds = time.perf_counter() - t0
         return manifest, config, report
 
@@ -322,7 +515,8 @@ class LayerStore:
             if not self.has_layer(lid):
                 problems.append(f"missing layer {lid}")
                 continue
-            layer = self.read_layer(lid)
+            # integrity checks must look at the bytes on DISK, not the cache
+            layer = self.read_layer(lid, use_cache=False)
             if content_checksum(layer.records) != layer.checksum:
                 problems.append(f"layer {lid}: content checksum mismatch")
             if config.layer_checksums.get(lid) != layer.checksum:

@@ -1,0 +1,23 @@
+"""Version compatibility for the Pallas TPU API.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` in older JAX
+releases (e.g. 0.4.x). Kernels build their compiler params through this
+shim so they run on whichever name the installed JAX exposes; if neither
+exists (or the kwargs don't apply), the kernel runs with compiler defaults
+rather than failing at import/call time.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    """-> a pltpu CompilerParams instance, or None if unavailable."""
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        return None

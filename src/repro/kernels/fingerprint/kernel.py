@@ -1,11 +1,25 @@
 """Chunk fingerprint — Pallas TPU kernel (the paper's C1 on-device).
 
 Computes the 64-bit multiply-xor fingerprint of every checkpoint chunk at
-HBM bandwidth: grid (n_chunks,), each step streams one chunk's uint32 lanes
-into VMEM, mixes them on the VPU (elementwise multiply/xor/shift — no MXU),
-and reduces to 2 int32 words. The (n_chunks, 2) table (16 B per MiB chunk)
-is all that crosses the host link; only changed chunks are then fetched and
-SHA-256'd by the store (core/diff.diff_layer_fingerprint).
+HBM bandwidth. The grid is 2-D: ``(n_chunks, n_tiles)`` — each chunk row is
+streamed through VMEM in ``tile_lanes``-wide inner tiles rather than one
+whole-chunk block, so
+
+* chunks larger than VMEM work (the old one-block-per-chunk layout capped
+  chunk_bytes at the VMEM size), and
+* the Mosaic pipeline double-buffers tile fetches while the VPU mixes the
+  previous tile.
+
+Both reductions (xor, wraparound add) are associative, so the tile dimension
+uses ``"arbitrary"`` semantics and accumulates partial results into the
+output block across tiles; the chunk dimension stays ``"parallel"``.
+
+A per-row ``widths`` operand masks lanes past each row's true lane count —
+this is what lets ``core.fingerprint.fingerprint_tree_packed`` pack tensors
+of different dtypes (different lanes-per-chunk) into one padded buffer and
+fingerprint an entire checkpoint in a single dispatch. The (n_chunks, 2)
+table (8 B per chunk) is all that crosses the host link; only changed chunks
+are then fetched and SHA-256'd by the store (core/diff).
 
 Matches core.fingerprint bit-for-bit (same constants, same mix).
 """
@@ -16,39 +30,77 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import compiler_params
 
 _C1 = 0x9E3779B9
 _C2 = 0x85EBCA6B
 _C3 = 0xC2B2AE35
 
+# Default inner tile: 64Ki lanes = 256 KiB of VMEM per buffer — small enough
+# to double-buffer comfortably, large enough to amortize grid overhead.
+DEFAULT_TILE_LANES = 1 << 16
 
-def _fp_kernel(u_ref, out_ref):
-    u = u_ref[0]                                     # (lanes,) uint32
-    lanes = u.shape[0]
+
+def _fp_kernel(w_ref, u_ref, out_ref):
+    j = pl.program_id(1)
+    tile = u_ref.shape[1]
     c1, c2, c3 = (jnp.uint32(_C1), jnp.uint32(_C2), jnp.uint32(_C3))
-    pos = jax.lax.broadcasted_iota(jnp.uint32, (lanes,), 0)
+    u = u_ref[...]                                    # (1, tile) uint32
+    pos_i = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1) + j * tile
+    pos = pos_i.astype(jnp.uint32)
     mixed = (u * c1) ^ (pos * c2 + c3)
     mixed = mixed ^ (mixed >> jnp.uint32(15))
     mixed = mixed * c3
-    fp_xor = jax.lax.reduce(mixed, jnp.uint32(0), jax.lax.bitwise_xor,
-                            dimensions=(0,))
-    fp_sum = jnp.sum(mixed, dtype=jnp.uint32)
-    out = jnp.stack([fp_xor, fp_sum]).astype(jnp.uint32)
-    out_ref[0] = jax.lax.bitcast_convert_type(out, jnp.int32)
+    # Mask lanes past this row's true width (ragged rows in a packed buffer
+    # and column padding up to n_tiles*tile): zero is the identity of both
+    # reductions, so masked lanes contribute nothing.
+    mixed = jnp.where(pos_i < w_ref[0, 0], mixed, jnp.uint32(0))
+    part_xor = jax.lax.reduce(mixed, jnp.uint32(0), jax.lax.bitwise_xor,
+                              dimensions=(0, 1))
+    part_sum = jnp.sum(mixed, dtype=jnp.uint32)
+
+    @pl.when(j == 0)
+    def _init():
+        out = jnp.stack([part_xor, part_sum]).astype(jnp.uint32)
+        out_ref[0] = jax.lax.bitcast_convert_type(out, jnp.int32)
+
+    @pl.when(j != 0)
+    def _accumulate():
+        prev = jax.lax.bitcast_convert_type(out_ref[0], jnp.uint32)
+        out = jnp.stack([prev[0] ^ part_xor, prev[1] + part_sum])
+        out_ref[0] = jax.lax.bitcast_convert_type(
+            out.astype(jnp.uint32), jnp.int32)
 
 
-def fingerprint_lanes(u32_lanes: jax.Array, *, interpret: bool = False
-                      ) -> jax.Array:
-    """u32_lanes: (n_chunks, lanes_per_chunk) uint32 -> (n_chunks, 2) i32."""
+def fingerprint_lanes(u32_lanes: jax.Array, *,
+                      widths: jax.Array | None = None,
+                      tile_lanes: int | None = None,
+                      interpret: bool = False) -> jax.Array:
+    """(n_chunks, lanes) uint32 [+ per-row widths] -> (n_chunks, 2) int32.
+
+    ``widths`` (n_chunks,) int32 gives each row's true lane count; lanes at
+    positions >= width are masked out of the reduction. Defaults to the full
+    buffer width (the single-tensor case, where every row is dense).
+    """
     n_chunks, lanes = u32_lanes.shape
+    tile = min(lanes, tile_lanes or DEFAULT_TILE_LANES)
+    n_tiles = -(-lanes // tile)
+    col_pad = n_tiles * tile - lanes
+    if col_pad:
+        u32_lanes = jnp.pad(u32_lanes, ((0, 0), (0, col_pad)))
+    if widths is None:
+        w = jnp.full((n_chunks, 1), lanes, jnp.int32)
+    else:
+        w = widths.astype(jnp.int32).reshape(n_chunks, 1)
     return pl.pallas_call(
         _fp_kernel,
-        grid=(n_chunks,),
-        in_specs=[pl.BlockSpec((1, lanes), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        grid=(n_chunks, n_tiles),
+        in_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_chunks, 2), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(u32_lanes)
+    )(w, u32_lanes)

@@ -1,30 +1,43 @@
-"""Jitted wrapper: array -> per-chunk fingerprints via the Pallas kernel.
+"""Jitted wrappers: array / pytree -> per-chunk fingerprints via the Pallas
+kernel.
 
-Reuses core.fingerprint's lane conversion so chunk boundaries and bit
-patterns match the store exactly.
+Reuses core.fingerprint's lane conversion and chunk geometry so chunk
+boundaries and bit patterns match the store exactly. ``fingerprint`` is the
+one-tensor path; ``fingerprint_tree`` fingerprints a whole flat payload
+dict in a single fused dispatch (pack + tiled kernel in one jit) — see
+core.fingerprint.fingerprint_tree_packed for the packing scheme.
 """
 from __future__ import annotations
 
 import functools
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...core.fingerprint import _to_u32_lanes
+from ...core.fingerprint import (_to_u32_lanes, chunk_geometry,
+                                 fingerprint_tree_packed)
 from .kernel import fingerprint_lanes
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_bytes", "interpret"))
+@functools.partial(jax.jit, static_argnames=("chunk_bytes", "interpret",
+                                             "tile_lanes"))
 def fingerprint(arr: jax.Array, chunk_bytes: int = 1 << 20, *,
+                tile_lanes: Optional[int] = None,
                 interpret: bool = False) -> jax.Array:
-    itemsize = jnp.dtype(arr.dtype).itemsize
-    if arr.dtype == jnp.bool_:
-        itemsize = 1
-    elems_per_chunk = max(1, chunk_bytes // itemsize)
-    n = arr.size
-    n_chunks = max(1, -(-n // elems_per_chunk))
+    n_chunks, lanes_per_chunk = chunk_geometry(
+        tuple(arr.shape), str(arr.dtype), chunk_bytes)
     u = _to_u32_lanes(arr)
-    lanes_per_chunk = (elems_per_chunk * u.size) // max(n, 1) if n else 1
     pad = n_chunks * lanes_per_chunk - u.size
     u = jnp.pad(u, (0, pad)).reshape(n_chunks, lanes_per_chunk)
-    return fingerprint_lanes(u, interpret=interpret)
+    return fingerprint_lanes(u, tile_lanes=tile_lanes, interpret=interpret)
+
+
+def fingerprint_tree(tree, chunk_bytes: int = 1 << 20, *,
+                     interpret: bool = False,
+                     stats: Optional[dict] = None) -> Dict[str, np.ndarray]:
+    """Whole-checkpoint fingerprints through the Pallas kernel: ONE device
+    dispatch, one (total_chunks, 2) D2H transfer."""
+    return fingerprint_tree_packed(tree, chunk_bytes, backend="pallas",
+                                   interpret=interpret, stats=stats)

@@ -1,0 +1,240 @@
+"""The fused save pipeline: packed whole-tree fingerprints (bit-identical
+to the per-leaf oracle), zero-copy chunking, range serialization, the
+fingerprint-prefiltered diff, and durability="batch" crash safety."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, chunk_tensor,
+                        diff_layer_host, fingerprint_chunks_ref,
+                        fingerprint_tree, fingerprint_tree_packed,
+                        iter_chunks, tensor_chunk_bytes, tensor_to_bytes)
+from repro.core.diff import diff_layer_fingerprint
+from repro.core.fingerprint import fingerprint_tree_ref
+
+
+def _mixed_tree():
+    import ml_dtypes
+    rng = np.random.default_rng(7)
+    return {
+        "f32": rng.standard_normal(5000).astype(np.float32),       # ragged
+        "f32_exact": rng.standard_normal(1024).astype(np.float32),  # aligned
+        "bf16": rng.standard_normal(777).astype(ml_dtypes.bfloat16),
+        "i8": rng.integers(-100, 100, 3333).astype(np.int8),
+        "bool": rng.standard_normal(1000) > 0,
+        "i64": rng.integers(-5, 5, 300).astype(np.int64),
+        "f64": rng.standard_normal(129),
+        "empty": np.zeros((0,), np.float32),
+        "scalar": np.float32(3.5),
+        "matrix": rng.standard_normal((64, 48)).astype(np.float32),
+    }
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_packed_tree_bit_identical_to_oracle(backend):
+    tree = _mixed_tree()
+    stats = {}
+    got = fingerprint_tree_packed(tree, 1024, backend=backend,
+                                  interpret=True, stats=stats)
+    for name, v in tree.items():
+        ref = fingerprint_chunks_ref(np.asarray(v), 1024)
+        assert np.array_equal(got[name], ref), name
+    assert stats["device_dispatches"] == 1
+    assert stats["bytes_d2h"] == sum(v.nbytes for v in got.values())
+
+
+def test_packed_matches_per_leaf_and_ref_tree():
+    tree = _mixed_tree()
+    packed = fingerprint_tree_packed(tree, 512)
+    per_leaf = fingerprint_tree(tree, 512)
+    oracle = fingerprint_tree_ref(tree, 512)
+    for name in tree:
+        assert np.array_equal(packed[name], per_leaf[name]), name
+        assert np.array_equal(packed[name], oracle[name]), name
+
+
+def test_packed_empty_tree():
+    assert fingerprint_tree_packed({}, 1024) == {}
+
+
+def test_iter_chunks_memoryview_byte_identical():
+    rng = np.random.default_rng(0)
+    data = rng.bytes(10_000)
+    pieces = list(iter_chunks(data, 1024))
+    assert all(isinstance(p, memoryview) for p in pieces)
+    old = [data[off:off + 1024] for off in range(0, len(data), 1024)]
+    assert [bytes(p) for p in pieces] == old
+    # empty input still yields exactly one (empty) chunk
+    empty = list(iter_chunks(b"", 1024))
+    assert len(empty) == 1 and bytes(empty[0]) == b""
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8", "bfloat16", "int64"])
+def test_tensor_chunk_bytes_matches_full_serialization(dtype):
+    import ml_dtypes
+    rng = np.random.default_rng(1)
+    arr = rng.standard_normal(3000)
+    arr = arr.astype(ml_dtypes.bfloat16 if dtype == "bfloat16" else dtype)
+    full = tensor_to_bytes(arr)
+    cb = 512
+    n_chunks = max(1, -(-len(full) // cb))
+    for i in range(n_chunks):
+        assert tensor_chunk_bytes(arr, i, cb) == full[i * cb:(i + 1) * cb], i
+
+
+def test_chunk_tensor_zero_copy_pairs_roundtrip():
+    rng = np.random.default_rng(2)
+    arr = rng.standard_normal(2000).astype(np.float32)
+    rec, pairs = chunk_tensor("x", arr, 512)
+    data = b"".join(bytes(p) for _, p in pairs)
+    assert data == tensor_to_bytes(arr)
+    from repro.core import sha256_hex
+    assert [h for h, _ in pairs] == [sha256_hex(bytes(p)) for _, p in pairs]
+
+
+def _layer_for(store, payload):
+    ins = [Instruction("FROM", "b", "config"),
+           Instruction("COPY", "data", "content")]
+    m, _, _ = store.build_image("m", "v1", ins, {"data": lambda: payload})
+    return store.read_layer(m.layer_ids[1])
+
+
+def test_fingerprint_diff_matches_host_diff(tmp_path):
+    rng = np.random.default_rng(3)
+    payload = {"a": rng.standard_normal(4000).astype(np.float32),
+               "b": rng.standard_normal(100).astype(np.float32)}
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512)
+    layer = _layer_for(store, payload)
+    new = {k: v.copy() for k, v in payload.items()}
+    new["a"][0] += 1.0
+    new["a"][2000] += 1.0
+    old_fps = fingerprint_tree_ref(payload, 512)
+    new_fps = fingerprint_tree_ref(new, 512)
+    d_fp = diff_layer_fingerprint(layer, new, old_fps, new_fps)
+    d_host = diff_layer_host(layer, new)
+    assert sorted([(e.tensor, e.index, e.new_hash, bytes(e.data))
+                   for e in d_fp.edits]) == \
+        sorted([(e.tensor, e.index, e.new_hash, bytes(e.data))
+                for e in d_host.edits])
+    assert d_fp.chunks_prefiltered > 0
+
+
+def test_fingerprint_diff_falls_back_without_history(tmp_path):
+    rng = np.random.default_rng(4)
+    payload = {"a": rng.standard_normal(1000).astype(np.float32)}
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512)
+    layer = _layer_for(store, payload)
+    new = {"a": payload["a"].copy()}
+    new["a"][1] += 1.0
+    # no fingerprints recorded for "a": per-tensor host fallback
+    d = diff_layer_fingerprint(layer, new, {}, {})
+    assert len(d.edits) == 1 and d.edits[0].index == 0
+
+
+def test_fingerprint_diff_geometry_mismatch_falls_back(tmp_path):
+    """Fingerprints computed with a different chunk size than the stored
+    records must not silently drop edits — the diff falls back to the
+    full host compare for that tensor."""
+    rng = np.random.default_rng(8)
+    payload = {"a": rng.standard_normal(2000).astype(np.float32)}
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512)
+    layer = _layer_for(store, payload)
+    new = {"a": payload["a"].copy()}
+    new["a"][-1] += 1.0                       # edit in the LAST chunk
+    old_fps = fingerprint_tree_ref(payload, 256)   # wrong chunk size
+    new_fps = fingerprint_tree_ref(new, 256)
+    d = diff_layer_fingerprint(layer, new, old_fps, new_fps)
+    host = diff_layer_host(layer, new)
+    assert [(e.tensor, e.index, e.new_hash) for e in d.edits] == \
+        [(e.tensor, e.index, e.new_hash) for e in host.edits]
+    assert d.edits                            # the edit was NOT dropped
+
+
+def test_batch_durability_crash_safety(tmp_path):
+    """durability="batch": the manifest rename stays the commit point — a
+    crash before write_image leaves the previous image fully intact."""
+    rng = np.random.default_rng(5)
+    payload = {"a": rng.standard_normal(4000).astype(np.float32)}
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512,
+                       durability="batch")
+    ins = [Instruction("FROM", "b", "config"),
+           Instruction("COPY", "data", "content")]
+    store.build_image("m", "v1", ins, {"data": lambda: payload})
+    assert store.verify_image("m", "v1") == []
+
+    # "crash" mid-save: blobs/layers written, commit never reached
+    new = {"a": payload["a"] + 1.0}
+    real_write_image = store.write_image
+    store.write_image = lambda *a, **k: (_ for _ in ()).throw(
+        OSError("power loss"))
+    with pytest.raises(OSError):
+        store.build_image("m", "v2", ins, {"data": lambda: new},
+                          parent=("m", "v1"))
+    store.write_image = real_write_image
+    # previous image untouched and verifiable; v2 never became visible
+    assert store.verify_image("m", "v1") == []
+    assert not store.has_image("m", "v2")
+    assert store.list_tags("m") == ["v1"]
+    # a completed batch-mode save verifies end to end
+    store.build_image("m", "v2", ins, {"data": lambda: new},
+                      parent=("m", "v1"))
+    assert store.verify_image("m", "v2") == []
+
+
+def test_batch_durability_defers_fsyncs_to_commit(tmp_path):
+    """batch mode: no fsync on the write path; everything (file data +
+    dirs) flushes in one concurrent batch at the commit point."""
+    from repro.core import sha256_hex
+    data = b"x" * 1024
+    h = sha256_hex(data)
+    full = LayerStore(str(tmp_path / "full"), chunk_bytes=512,
+                      durability="full")
+    full.write_blob(h, data)
+    assert full.fsyncs == 1              # synced inline
+    batch = LayerStore(str(tmp_path / "batch"), chunk_bytes=512,
+                       durability="batch")
+    batch.write_blob(h, data)
+    assert batch.fsyncs == 0             # deferred
+    batch.sync_for_commit()
+    assert batch.fsyncs == 2             # blob file data + its directory
+    batch.sync_for_commit()
+    assert batch.fsyncs == 2             # idempotent: nothing dirty left
+
+
+def test_list_tags_skips_hex_config_ids(tmp_path):
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512)
+    ins = [Instruction("FROM", "b", "config")]
+    store.build_image("m", "sometag", ins, {})
+    d = os.path.join(store.root, "images", "m")
+    files = os.listdir(d)
+    # the config blob (32-hex uuid) is on disk but not listed as a tag
+    assert any(len(f) == 37 for f in files)
+    assert store.list_tags("m") == ["sometag"]
+
+
+def test_manager_packed_fingerprint_save_equivalent(tmp_path):
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    params = {"embed": jnp.arange(512, dtype=jnp.float32).reshape(64, 8),
+              "blocks": {"w": jnp.ones((4, 8, 8), jnp.float32)},
+              "head": jnp.zeros((8,), jnp.float32)}
+    opt = {"step": jnp.int32(0)}
+    mgr = CheckpointManager(
+        str(tmp_path), "tiny",
+        CheckpointPolicy(incremental=True, use_fingerprints=True,
+                         packed_fingerprints=True, async_write=False,
+                         chunk_bytes=256, durability="batch"))
+    mgr.save(0, params, opt)
+    p2 = dict(params)
+    p2["embed"] = params["embed"].at[5, 2].add(3.0)
+    rep = mgr.save(1, p2, opt)
+    assert rep.bytes_d2h > 0
+    assert rep.chunks_prefiltered > 0
+    out = mgr.restore()
+    assert out is not None
+    p3, _, step = out
+    assert step == 1
+    assert np.array_equal(np.asarray(p3["embed"]), np.asarray(p2["embed"]))
+    assert np.array_equal(np.asarray(p3["blocks"]["w"]),
+                          np.asarray(params["blocks"]["w"]))

@@ -84,6 +84,37 @@ def test_fingerprint_kernel_bf16():
     assert np.array_equal(got, ref)
 
 
+def test_fingerprint_kernel_tiled_large_chunk():
+    """Chunks wider than one inner tile: cross-tile xor/add accumulation
+    must still be bit-identical to the single-pass oracle."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(40000).astype(np.float32)
+    from repro.kernels.fingerprint.ops import fingerprint as fp_op
+    got = np.asarray(fp_op(jnp.asarray(x), 1 << 16, tile_lanes=1024,
+                           interpret=True))
+    ref = fingerprint_chunks_ref(x, 1 << 16)
+    assert np.array_equal(got, ref)
+
+
+def test_fingerprint_kernel_packed_tree():
+    """Mixed-dtype tree through the Pallas kernel in ONE dispatch: per-row
+    width masking must reproduce every leaf's per-leaf fingerprint."""
+    import ml_dtypes
+    from repro.kernels.fingerprint.ops import fingerprint_tree as fp_tree
+    rng = np.random.default_rng(4)
+    tree = {
+        "f32": rng.standard_normal(3000).astype(np.float32),
+        "i8": rng.integers(-100, 100, 2000).astype(np.int8),
+        "bf16": rng.standard_normal(1025).astype(ml_dtypes.bfloat16),
+        "bool": rng.standard_normal(300) > 0,
+    }
+    got = fp_tree(tree, 1024, interpret=True)
+    for name, v in tree.items():
+        assert np.array_equal(got[name],
+                              fingerprint_chunks_ref(np.asarray(v), 1024)), \
+            name
+
+
 def test_fingerprint_kernel_sensitivity():
     rng = np.random.default_rng(2)
     x = rng.standard_normal(8192).astype(np.float32)

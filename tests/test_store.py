@@ -47,11 +47,27 @@ def test_cache_hit_on_unchanged_rebuild(tmp_path, rng):
     store.build_image("m", "v1", INS, providers(p))
     _, _, rep = store.build_image("m", "v2", INS, providers(p),
                                   parent=("m", "v1"))
-    # all four layers cached; the COPY re-hash cost is counted (DLC rule 3)
+    # all four layers cached; the COPY content compare (DLC rule 3) is
+    # answered by the fingerprint prefilter — no chunk re-hash at all
     assert rep.layers_cached == 4
     assert rep.layers_built == 0
-    assert rep.bytes_hashed > 0          # content compare isn't free
+    assert rep.chunks_prefiltered > 0
+    assert rep.bytes_hashed == 0
     assert rep.derivations_run == 0
+
+
+def test_cache_hit_without_fingerprints_rehashes(tmp_path, rng):
+    """record_fingerprints=False keeps the seed (Docker-faithful) DLC rule
+    3: a COPY cache hit costs a full serialize+hash of the payload."""
+    store = LayerStore(str(tmp_path / "store_nofp"), chunk_bytes=1024,
+                       record_fingerprints=False)
+    p = payloads(rng)
+    store.build_image("m", "v1", INS, providers(p))
+    _, _, rep = store.build_image("m", "v2", INS, providers(p),
+                                  parent=("m", "v1"))
+    assert rep.layers_cached == 4
+    assert rep.bytes_hashed > 0          # content compare isn't free
+    assert rep.chunks_prefiltered == 0
 
 
 def test_fall_through_rebuilds_downstream(tmp_path, rng):

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) for the store's core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Instruction, LayerStore, inject_payload_update,
                         new_uuid)
