@@ -1,0 +1,130 @@
+"""CI benchmark-regression gate.
+
+    PYTHONPATH=src python -m benchmarks.run --quick
+    PYTHONPATH=src python -m benchmarks.check_regression [--threshold 1.25]
+
+Compares the fresh results in benchmarks/results/*.json against the
+COMMITTED ``BENCH_*.json`` baselines at the repo root and fails (exit 1)
+on a >25% slowdown of any gated metric. Gated metrics are machine-portable
+RATIOS (median-based speedups) rather than absolute seconds: CI runners
+and dev boxes differ wildly in absolute fsync/SHA/dispatch throughput, but
+the batched-vs-sequential and packed-vs-per-leaf ratios are properties of
+the code. Structural invariants — the batched injection path must keep
+exactly ONE re-key walk and ONE manifest commit — are checked exactly,
+whatever the timings do.
+
+``benchmarks.run --update-baseline`` refreshes the baselines after an
+intentional perf change; a plain ``--quick`` run never touches them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (results file, baseline file, dotted metric path, threshold override) —
+# ratio metrics where HIGHER is better; fresh < baseline/threshold fails.
+# The multilayer ratios are stable run-to-run (<20% swing at --quick), so
+# they gate at the default 1.25. incremental_save's ratio is dominated by
+# fsync latency, which swings ~3x between runs on shared machines — its
+# wide threshold still catches the real failure mode (the packed pipeline
+# losing its advantage and dropping toward 1x) without flaking on noise.
+RATIO_GATES = [
+    ("incremental_save.json", "BENCH_incremental_save.json", "speedup",
+     3.5),
+    ("multilayer_inject.json", "BENCH_multilayer_inject.json",
+     "k4.speedup_wall", None),
+    ("multilayer_inject.json", "BENCH_multilayer_inject.json",
+     "k8.speedup_wall", None),
+]
+
+# (results file, dotted path, exact expected value)
+INVARIANTS = [
+    ("multilayer_inject.json", "k1.batched.rekey_walks", 1),
+    ("multilayer_inject.json", "k8.batched.rekey_walks", 1),
+    ("multilayer_inject.json", "k1.batched.manifest_commits", 1),
+    ("multilayer_inject.json", "k8.batched.manifest_commits", 1),
+]
+
+
+def _load(path: str, problems: list) -> dict | None:
+    if not os.path.exists(path):
+        problems.append(f"missing {path} — did the benchmark run?")
+        return None
+    with open(path) as f:
+        data = json.load(f)
+    if "error" in data:
+        problems.append(f"{path}: benchmark errored: {data['error']}")
+        return None
+    return data
+
+
+def _dig(data: dict, dotted: str, path: str, problems: list):
+    cur = data
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            problems.append(f"{path}: metric {dotted!r} not found")
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max tolerated slowdown ratio (1.25 = 25%%)")
+    ap.add_argument("--results", default=RESULTS)
+    args = ap.parse_args()
+
+    problems: list = []
+    for res_name, base_name, metric, override in RATIO_GATES:
+        fresh = _load(os.path.join(args.results, res_name), problems)
+        base = _load(os.path.join(REPO_ROOT, base_name), problems)
+        if fresh is None or base is None:
+            continue
+        got = _dig(fresh, metric, res_name, problems)
+        want = _dig(base, metric, base_name, problems)
+        if got is None or want is None:
+            continue
+        threshold = override or args.threshold
+        # absolute sanity floor: whatever the baseline says, a gated
+        # speedup at or below 1.0 means the optimized path lost its
+        # advantage entirely — always a failure
+        floor = max(want / threshold, 1.0)
+        verdict = "OK" if got >= floor else "REGRESSION"
+        print(f"{verdict:10s} {res_name}:{metric} = {got:.2f} "
+              f"(baseline {want:.2f}, floor {floor:.2f})")
+        if got < floor:
+            problems.append(
+                f"{res_name}: {metric} regressed to {got:.2f} "
+                f"(baseline {want:.2f}, >{threshold:.2f}x slowdown)")
+
+    for res_name, dotted, expected in INVARIANTS:
+        fresh = _load(os.path.join(args.results, res_name), problems)
+        if fresh is None:
+            continue
+        got = _dig(fresh, dotted, res_name, problems)
+        if got is None:
+            continue
+        verdict = "OK" if got == expected else "BROKEN"
+        print(f"{verdict:10s} {res_name}:{dotted} = {got} "
+              f"(must be {expected})")
+        if got != expected:
+            problems.append(f"{res_name}: invariant {dotted} = {got}, "
+                            f"expected {expected}")
+
+    if problems:
+        print("\nFAIL:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("\nbenchmark gate: all metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -202,7 +202,8 @@ def bench_incremental_save(trials: int) -> dict:
     checkpoint save on a 100+-leaf state, seed per-leaf fingerprint
     dispatch vs the packed single-dispatch + batch-durability pipeline.
     Also records a bit-identity sweep of the packed fingerprints against
-    the numpy oracle. Writes BENCH_incremental_save.json at the repo root.
+    the numpy oracle. (main() snapshots this to BENCH_incremental_save.json
+    at the repo root under --update-baseline.)
     """
     import jax.numpy as jnp
     from repro.ckpt import CheckpointManager, CheckpointPolicy
@@ -289,10 +290,117 @@ def bench_incremental_save(trials: int) -> dict:
             for k, v in sweep.items()}
     finally:
         shutil.rmtree(root, ignore_errors=True)
-    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    with open(os.path.join(repo_root, "BENCH_incremental_save.json"),
-              "w") as f:
-        json.dump(out, f, indent=1)
+    return out
+
+
+def bench_multilayer_inject(trials: int) -> dict:
+    """The multi-layer transactional unit (this repo's CI tentpole): k
+    changed content layers saved as ONE batched injection
+    (``inject_image_multi``: one re-key walk + one manifest commit) vs a
+    CONSTRUCTED per-layer protocol — one single-layer injection
+    transaction per changed layer (k walks, k commits). Both arms run
+    under identical batch durability, so the ratio isolates the
+    transactional-unit cost (walks, re-keys, commits), not fsync mode.
+    Note the baseline is the design alternative a per-layer transactional
+    unit would cost, not the seed save path (which already batched diffs
+    into one call); edits are one chunk per layer, so wall time IS the
+    metadata path. BuildReport counters prove the 1-vs-k walk/commit
+    claim.
+    """
+    from repro.core import (Instruction, LayerStore, diff_image,
+                            inject_image_multi)
+    from .scenarios import _edit_chunks, _gen
+
+    n_layers, chunk_bytes, layer_bytes = 8, 1 << 16, 2 << 20
+    ins = [Instruction("FROM", "base", "config")]
+    payloads = {}
+    for i in range(n_layers):
+        key = f"layer{i}"
+        ins.append(Instruction("COPY", key, "content"))
+        payloads[key] = _gen(300 + i, layer_bytes)
+    ins.append(Instruction("RUN", "setup", "content"))   # independent tail
+    payloads["setup"] = _gen(299, layer_bytes)
+    ins.append(Instruction("CMD", "serve", "config"))
+
+    def diffs_for(store, tag, keys, edited):
+        m, _ = store.read_image("app", tag)
+        layers = [store.read_layer(lid) for lid in m.layer_ids]
+        return diff_image(layers, {k: {"data": edited[k]} for k in keys})
+
+    out = {"n_layers": n_layers, "chunk_bytes": chunk_bytes,
+           "layer_bytes": layer_bytes, "trials": trials}
+    root = tempfile.mkdtemp(prefix="lc_multi_")
+    try:
+        for k in (1, 2, 4, 8):
+            keys = [f"layer{i}" for i in range(k)]
+            bt, st = [], []
+            b_rep = None
+            s_counters = {"rekey_walks": 0, "manifest_commits": 0,
+                          "layers_rekeyed": 0, "fsyncs": 0}
+            for tr in range(trials):
+                edited = {key: _edit_chunks(payloads[key], 1, chunk_bytes,
+                                            seed=tr + 1) for key in keys}
+                store = LayerStore(os.path.join(root, f"b{k}_{tr}"),
+                                   chunk_bytes=chunk_bytes)
+                prov = {key: (lambda v=v: {"data": v})
+                        for key, v in payloads.items()}
+                store.build_image("app", "v1", ins, prov)
+                diffs = diffs_for(store, "v1", keys, edited)
+                t0 = time.perf_counter()
+                _, _, b_rep = inject_image_multi(store, "app", "v1", "v2",
+                                                 diffs)
+                bt.append(time.perf_counter() - t0)
+                shutil.rmtree(os.path.join(root, f"b{k}_{tr}"))
+
+                store = LayerStore(os.path.join(root, f"s{k}_{tr}"),
+                                   chunk_bytes=chunk_bytes)
+                store.build_image("app", "v1", ins, prov)
+                tag, elapsed = "v1", 0.0
+                for i, key in enumerate(keys):
+                    diffs = diffs_for(store, tag, [key], edited)
+                    next_tag = f"v2_{i}"
+                    t0 = time.perf_counter()
+                    _, _, r = inject_image_multi(store, "app", tag,
+                                                 next_tag, diffs,
+                                                 durability="batch")
+                    elapsed += time.perf_counter() - t0
+                    for c in s_counters:
+                        s_counters[c] += getattr(r, c)
+                    tag = next_tag
+                st.append(elapsed)
+                shutil.rmtree(os.path.join(root, f"s{k}_{tr}"))
+            b, s = np.asarray(bt), np.asarray(st)
+            out[f"k{k}"] = {
+                "batched": {
+                    "median_s": float(np.median(b)),
+                    "mean_s": float(b.mean()),
+                    "min_s": float(b.min()),
+                    "rekey_walks": b_rep.rekey_walks,
+                    "manifest_commits": b_rep.manifest_commits,
+                    "layers_injected": b_rep.layers_injected,
+                    "layers_rekeyed": b_rep.layers_rekeyed,
+                    "fsyncs": b_rep.fsyncs,
+                },
+                "sequential": {
+                    "median_s": float(np.median(s)),
+                    "mean_s": float(s.mean()),
+                    "min_s": float(s.min()),
+                    **{c: v // trials for c, v in s_counters.items()},
+                },
+                "speedup_wall": float(np.median(s) / np.median(b)),
+            }
+            out[f"k{k}"]["metadata_op_ratio"] = (
+                (out[f"k{k}"]["sequential"]["layers_rekeyed"]
+                 + out[f"k{k}"]["sequential"]["manifest_commits"]) /
+                max(out[f"k{k}"]["batched"]["layers_rekeyed"]
+                    + out[f"k{k}"]["batched"]["manifest_commits"], 1))
+            print(f"multiinject_k{k}_batched,"
+                  f"{np.median(b) * 1e6:.1f},walks={b_rep.rekey_walks} "
+                  f"commits={b_rep.manifest_commits}")
+            print(f"multiinject_k{k}_sequential,{np.median(s) * 1e6:.1f},"
+                  f"speedup={out[f'k{k}']['speedup_wall']:.2f}x")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
     return out
 
 
@@ -337,15 +445,28 @@ def bench_roofline() -> dict:
     return table
 
 
+# Benches with a committed repo-root baseline snapshot: the CI regression
+# gate (benchmarks/check_regression.py) compares fresh results/<name>.json
+# against BENCH_<name>.json. Baselines are only (re)written under
+# --update-baseline so a CI --quick run never clobbers the committed one.
+BASELINES = {
+    "incremental_save": "BENCH_incremental_save.json",
+    "multilayer_inject": "BENCH_multilayer_inject.json",
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=30)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="snapshot BENCH_*.json baselines at the repo root")
     args = ap.parse_args()
     trials = 5 if args.quick else args.trials
 
     os.makedirs(RESULTS, exist_ok=True)
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     results = {}
     benches = {
         "scenarios": lambda: bench_scenarios(trials),
@@ -353,6 +474,7 @@ def main() -> None:
         "fallthrough": lambda: bench_fallthrough(max(trials // 3, 3)),
         "ckpt_cadence": lambda: bench_ckpt_cadence(trials),
         "incremental_save": lambda: bench_incremental_save(trials),
+        "multilayer_inject": lambda: bench_multilayer_inject(trials),
         "fingerprint": lambda: bench_fingerprint(trials),
         "roofline": bench_roofline,
     }
@@ -368,6 +490,10 @@ def main() -> None:
             results[name] = {"error": str(e)}
         with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
             json.dump(results[name], f, indent=1, default=str)
+        if args.update_baseline and name in BASELINES and \
+                "error" not in results[name]:
+            with open(os.path.join(repo_root, BASELINES[name]), "w") as f:
+                json.dump(results[name], f, indent=1, default=str)
 
 
 if __name__ == "__main__":

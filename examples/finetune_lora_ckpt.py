@@ -30,7 +30,7 @@ def main():
     total_mb = sum(np.asarray(l).nbytes
                    for l in jax.tree.leaves(params)) / 1e6
     print(f"backbone: {total_mb:.1f} MB; tuning 8 soft-prompt embedding "
-          f"rows (prompt-tuning), backbone frozen")
+          "rows (prompt-tuning), backbone frozen")
 
     # trainable = 8 soft-prompt embedding rows; backbone frozen.
     # The embedding is the FIRST content layer of the checkpoint image, so

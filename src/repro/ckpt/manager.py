@@ -30,10 +30,12 @@ tentpole; benchmarks/run.py::bench_incremental_save records it):
      (``BuildReport.chunks_prefiltered``); only changed chunk *ranges* are
      serialized (``tensor_chunk_bytes``) and SHA-256'd on the shared hash
      pool. Leaves stay device-resident until a range is actually touched.
-  3. store    — chunk blobs are injected clone-before-inject; with
-     ``durability="batch"`` per-chunk fsyncs are deferred to the manifest
-     commit point and issued as one concurrent batch
-     (``BuildReport.fsyncs`` counts the syscalls either way).
+  3. store    — all changed layers go through ONE multi-layer injection
+     (``core.inject.inject_image_multi``): clone-before-inject per layer,
+     a single downstream re-key walk and a single manifest commit per
+     save, with per-chunk fsyncs deferred to that commit point and issued
+     as one concurrent batch. ``BuildReport.per_layer`` attributes
+     chunks/bytes/re-keys to each layer of the checkpoint image.
 
 Async: serialization of the *diff payload* happens on the caller thread
 (cheap: only changed chunks), blob/manifest writes go to a background
@@ -43,20 +45,16 @@ checkpoint intact — tests/test_ft.py kills a save mid-flight to prove it.
 """
 from __future__ import annotations
 
-import json
 import os
-import threading
-import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
-from ..core import (BuildReport, Instruction, LayerStore, diff_layer_host,
-                    fingerprint_tree, fingerprint_tree_packed, inject_image)
-from ..core.diff import LayerDiff, diff_layer_fingerprint
+from ..core import (BuildReport, Instruction, LayerStore, diff_image,
+                    fingerprint_tree, fingerprint_tree_packed,
+                    inject_image_multi)
 
 
 def flatten_tree(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -223,33 +221,31 @@ class CheckpointManager:
     def _save_incremental(self, step: int,
                           payloads: Dict[str, Dict[str, np.ndarray]]
                           ) -> BuildReport:
-        """The paper's injection path (C1-C4)."""
+        """The paper's injection path (C1-C4) as ONE multi-layer batch: a
+        save touching embed+blocks+head pays a single clone+re-key walk and
+        a single manifest commit (durability="batch" defers every blob
+        fsync of the batch to that commit point), with per-layer cost
+        attribution in ``BuildReport.per_layer``."""
         prev = self.latest_step()
         manifest, _ = self.store.read_image(self.IMAGE, self.tag_of(prev))
         stats: dict = {}
         new_fps: Dict[str, np.ndarray] = {}
         if self.policy.use_fingerprints:
             new_fps = self._compute_fps(payloads, stats)
-        diffs: Dict[str, LayerDiff] = {}
-        for lid in manifest.layer_ids:
-            layer = self.store.read_layer(lid)
-            if layer.empty:
-                continue
-            key = layer.instruction.arg
-            if key not in payloads:
-                continue
-            if self.policy.use_fingerprints:
-                d = diff_layer_fingerprint(layer, payloads[key],
-                                           self._last_fps, new_fps)
-            else:
-                d = diff_layer_host(layer, payloads[key])
-            if not d.is_empty:
-                diffs[lid] = d
+        layers = [self.store.read_layer(lid) for lid in manifest.layer_ids]
+        if self.policy.use_fingerprints:
+            diffs = diff_image(layers, payloads,
+                               old_fps=self._last_fps, new_fps=new_fps)
+        else:
+            diffs = diff_image(layers, payloads)
         try:
-            _, _, report = inject_image(
+            # one batched transaction under the POLICY's durability mode
+            # (batch = one deferred fsync flush at the manifest commit)
+            _, _, report = inject_image_multi(
                 self.store, self.IMAGE, self.tag_of(prev),
                 self.tag_of(step), diffs,
-                providers={k: (lambda p=v: p) for k, v in payloads.items()})
+                providers={k: (lambda p=v: p) for k, v in payloads.items()},
+                durability=self.policy.durability)
         except Exception:
             # structure changed ("compiled" case) -> rebuild fall-back
             report = self._save_full(step, payloads,

@@ -11,10 +11,9 @@ reshard-restore -> continue (examples/elastic_restart.py).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .manager import CheckpointManager

@@ -6,29 +6,33 @@ verifying registry — Docker's layer system re-built for JAX training state.
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, bytes_to_tensor,
                       chunk_tensor, hash_chunks, iter_chunks, sha256_hex,
                       tensor_chunk_bytes, tensor_to_bytes)
-from .diff import (ChunkEdit, LayerDiff, diff_layer_fingerprint,
-                   diff_layer_host, locate_changed_layers)
-from .fingerprint import (chunk_geometry, fingerprint_chunks,
-                          fingerprint_chunks_ref, fingerprint_tree,
-                          fingerprint_tree_packed, fingerprint_tree_ref,
-                          tree_pack_index)
+from .diff import (ChunkEdit, LayerDiff, diff_image,
+                   diff_layer_fingerprint, diff_layer_host,
+                   locate_changed_layers)
+from .fingerprint import (chunk_geometry, fingerprint_chunk_bytes_ref,
+                          fingerprint_chunks, fingerprint_chunks_ref,
+                          fingerprint_tree, fingerprint_tree_packed,
+                          fingerprint_tree_ref, tree_pack_index)
 from .inject import (StructureChangeError, apply_edits, clone_layer,
-                     inject_image, inject_payload_update)
+                     inject_image, inject_image_multi,
+                     inject_payload_update)
 from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
-                       chain_checksum, content_checksum, new_uuid)
+                       chain_checksum, content_checksum,
+                       injection_history_entry, new_uuid)
 from .registry import PushRejected, PushStats, pull, push
 from .store import BuildReport, LayerStore
 
 __all__ = [
     "DEFAULT_CHUNK_BYTES", "TensorRecord", "bytes_to_tensor", "chunk_tensor",
     "hash_chunks", "iter_chunks", "sha256_hex", "tensor_chunk_bytes",
-    "tensor_to_bytes", "ChunkEdit", "LayerDiff",
+    "tensor_to_bytes", "ChunkEdit", "LayerDiff", "diff_image",
     "diff_layer_fingerprint", "diff_layer_host", "locate_changed_layers",
-    "chunk_geometry", "fingerprint_chunks", "fingerprint_chunks_ref",
-    "fingerprint_tree", "fingerprint_tree_packed", "fingerprint_tree_ref",
-    "tree_pack_index",
+    "chunk_geometry", "fingerprint_chunk_bytes_ref", "fingerprint_chunks",
+    "fingerprint_chunks_ref", "fingerprint_tree", "fingerprint_tree_packed",
+    "fingerprint_tree_ref", "tree_pack_index",
     "StructureChangeError", "apply_edits", "clone_layer", "inject_image",
-    "inject_payload_update", "ImageConfig", "Instruction", "LayerDescriptor",
-    "Manifest", "chain_checksum", "content_checksum", "new_uuid",
+    "inject_image_multi", "inject_payload_update", "ImageConfig",
+    "Instruction", "LayerDescriptor", "Manifest", "chain_checksum",
+    "content_checksum", "injection_history_entry", "new_uuid",
     "PushRejected", "PushStats", "pull", "push", "BuildReport", "LayerStore",
 ]

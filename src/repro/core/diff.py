@@ -22,6 +22,7 @@ import numpy as np
 
 from .chunker import (hash_chunks, iter_chunks, tensor_chunk_bytes,
                       tensor_to_bytes)
+from .fingerprint import fingerprint_chunk_bytes_ref
 from .manifest import LayerDescriptor
 
 
@@ -31,6 +32,11 @@ class ChunkEdit:
     index: int          # chunk index within the tensor
     new_hash: str
     data: bytes
+    # Fingerprint of the NEW chunk bytes ((xor, sum) int32 pair) when the
+    # edited record carries a fingerprint sidecar — lets apply_edits keep
+    # ``TensorRecord.fp`` alive across injection so the next build_image
+    # COPY prefilter never falls back to a full re-hash.
+    fp: Optional[Tuple[int, int]] = None
 
 
 @dataclass
@@ -63,7 +69,10 @@ def _host_compare_tensor(rec, name: str, arr, diff: LayerDiff) -> None:
     pieces = list(iter_chunks(data, rec.chunk_bytes))
     for i, h in enumerate(hash_chunks(pieces)):
         if h != rec.chunks[i]:
-            diff.edits.append(ChunkEdit(name, i, h, bytes(pieces[i])))
+            fp = fingerprint_chunk_bytes_ref(
+                pieces[i], rec.dtype, rec.chunk_bytes) \
+                if rec.fp is not None else None
+            diff.edits.append(ChunkEdit(name, i, h, bytes(pieces[i]), fp=fp))
 
 
 def diff_layer_host(layer: LayerDescriptor,
@@ -133,7 +142,9 @@ def diff_layer_fingerprint(layer: LayerDescriptor,
         pieces = [tensor_chunk_bytes(arr, i, rec.chunk_bytes) for i in idxs]
         for i, piece, h in zip(idxs, pieces, hash_chunks(pieces)):
             if h != rec.chunks[i]:
-                diff.edits.append(ChunkEdit(name, i, h, piece))
+                # new fingerprint comes free from the already-computed table
+                fp = (int(fp_new[i, 0]), int(fp_new[i, 1]))
+                diff.edits.append(ChunkEdit(name, i, h, piece, fp=fp))
     return diff
 
 
@@ -141,14 +152,34 @@ def locate_changed_layers(layers: Sequence[LayerDescriptor],
                           payloads: Dict[str, Dict[str, np.ndarray]],
                           ) -> List[Tuple[LayerDescriptor, LayerDiff]]:
     """Walk the image's layers 'Dockerfile line by line' (paper §III.A) and
-    return diffs for every content layer whose payload is provided."""
-    out: List[Tuple[LayerDescriptor, LayerDiff]] = []
+    return (layer, diff) pairs for every changed content layer — a tuple
+    view over ``diff_image`` (the {layer_id: diff} form injection takes)."""
+    by_id = {layer.layer_id: layer for layer in layers}
+    return [(by_id[lid], d)
+            for lid, d in diff_image(layers, payloads).items()]
+
+
+def diff_image(layers: Sequence[LayerDescriptor],
+               payloads: Dict[str, Dict[str, np.ndarray]],
+               old_fps: Optional[Dict[str, np.ndarray]] = None,
+               new_fps: Optional[Dict[str, np.ndarray]] = None,
+               ) -> Dict[str, LayerDiff]:
+    """C1 over a whole image: one non-empty LayerDiff per targeted content
+    layer, keyed by layer_id — the input unit of ``inject_image_multi``.
+    Passing both fingerprint tables switches every layer to the prefiltered
+    detector; otherwise the host SHA compare runs."""
+    diffs: Dict[str, LayerDiff] = {}
     for layer in layers:
         if layer.empty:
             continue
         key = layer.instruction.arg
-        if key in payloads:
+        if key not in payloads:
+            continue
+        if old_fps is not None and new_fps is not None:
+            d = diff_layer_fingerprint(layer, payloads[key],
+                                       old_fps, new_fps)
+        else:
             d = diff_layer_host(layer, payloads[key])
-            if not d.is_empty:
-                out.append((layer, d))
-    return out
+        if not d.is_empty:
+            diffs[layer.layer_id] = d
+    return diffs

@@ -283,3 +283,27 @@ def fingerprint_tree_ref(tree, chunk_bytes: int = 1 << 20
     """Numpy oracle for a whole flat payload dict (no device round-trip)."""
     return {name: fingerprint_chunks_ref(np.asarray(v), chunk_bytes)
             for name, v in tree.items()}
+
+
+def fingerprint_chunk_bytes_ref(data, dtype: str,
+                                chunk_bytes: int = 1 << 20
+                                ) -> Optional[Tuple[int, int]]:
+    """Fingerprint ONE serialized chunk — bit-identical to the row this
+    chunk gets in ``fingerprint_chunks_ref`` over the whole tensor (lane
+    positions restart at 0 per chunk; a partial final chunk zero-pads to
+    the full lane width). Host-side, used to refresh the ``TensorRecord.fp``
+    sidecar for injected chunks (only changed chunks ever pay this).
+
+    Returns None for pathological chunk sizes that do not align to the
+    dtype's itemsize (mirroring ``chunker.tensor_chunk_bytes``'s fallback):
+    a mid-tensor chunk then splits elements across chunk boundaries and no
+    per-chunk recompute can match the whole-tensor table — callers drop
+    the sidecar instead of crashing.
+    """
+    from .chunker import bytes_to_tensor
+    if chunk_bytes % dtype_itemsize(dtype) or \
+            len(data) % dtype_itemsize(dtype):
+        return None
+    arr = bytes_to_tensor(bytes(data), (-1,), dtype)
+    fp = fingerprint_chunks_ref(arr, chunk_bytes)
+    return int(fp[0, 0]), int(fp[0, 1])

@@ -74,6 +74,19 @@ def chain_checksum(parent_chain: Optional[str], own_content: str,
     return sha256_hex(f"{parent_chain or ''}+{own_content}+{instruction_text}".encode())
 
 
+def injection_history_entry(per_layer: Dict[str, Dict[str, int]],
+                            total_edits: int) -> dict:
+    """ImageConfig history record for ONE batched injection commit.
+
+    ``per_layer`` mirrors ``BuildReport.per_layer`` (keyed by the source
+    image's layer ids), so the image history itself attributes which layer
+    cost what in the batch — the audit trail for the multi-layer
+    transactional unit."""
+    return {"instruction": "INJECT", "edits": int(total_edits),
+            "per_layer": {lid: dict(entry)
+                          for lid, entry in per_layer.items()}}
+
+
 @dataclass
 class LayerDescriptor:
     layer_id: str               # unique per revision (descriptor identity —

@@ -12,9 +12,7 @@ legitimately new layer.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
 
-from .manifest import dumps
 from .store import LayerStore
 
 
@@ -46,7 +44,7 @@ def push(src: LayerStore, dst: LayerStore, name: str, tag: str) -> PushStats:
                 # The paper's exact failure mode: same id, diverged content.
                 raise PushRejected(
                     f"layer {lid}: remote holds a different checksum trace "
-                    f"for this id (in-place mutation without a new id?)")
+                    "for this id (in-place mutation without a new id?)")
             stats.layers_dedup += 1
         else:
             stats.layers_sent += 1

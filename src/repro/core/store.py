@@ -108,16 +108,32 @@ class BuildReport:
     bytes_d2h: int = 0           # device->host traffic (fingerprint tables)
     chunks_prefiltered: int = 0  # chunks skipped via fingerprint prefilter
     fsyncs: int = 0              # fsync syscalls issued (files + dirs)
+    rekey_walks: int = 0         # downstream chain-re-key walks performed
+    manifest_commits: int = 0    # write_image commit points hit
     wall_seconds: float = 0.0
+    # Per-layer cost attribution, keyed by the SOURCE image's layer_id
+    # (the id the caller's diffs/providers are keyed by). Each entry:
+    # {"chunks_written", "bytes_written", "rekeyed", "rederived"}.
+    per_layer: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
     _COUNTERS = ("layers_built", "layers_cached", "layers_injected",
                  "layers_rekeyed", "bytes_serialized", "bytes_hashed",
                  "chunks_written", "derivations_run", "bytes_d2h",
-                 "chunks_prefiltered", "fsyncs")
+                 "chunks_prefiltered", "fsyncs", "rekey_walks",
+                 "manifest_commits")
+
+    def layer_entry(self, layer_id: str) -> Dict[str, int]:
+        return self.per_layer.setdefault(
+            layer_id, {"chunks_written": 0, "bytes_written": 0,
+                       "rekeyed": 0, "rederived": 0})
 
     def merge(self, other: "BuildReport") -> None:
         for k in self._COUNTERS:
             setattr(self, k, getattr(self, k) + getattr(other, k))
+        for lid, entry in other.per_layer.items():
+            mine = self.layer_entry(lid)
+            for k, v in entry.items():
+                mine[k] = mine.get(k, 0) + v
         self.wall_seconds += other.wall_seconds
 
 
@@ -148,6 +164,7 @@ class LayerStore:
         self.durability = durability
         self.record_fingerprints = record_fingerprints
         self.fsyncs = 0              # lifetime fsync count (files + dirs)
+        self.commits = 0             # lifetime write_image commit count
         self._dirty_dirs: set = set()
         self._dirty_files: set = set()
         # paths this process knows are durable (fsync'd inline or at a
@@ -271,6 +288,7 @@ class LayerStore:
         _atomic_write(os.path.join(d, f"{manifest.tag}.json"),
                       dumps(manifest.to_json()).encode())
         self.fsyncs += 2
+        self.commits += 1
 
     def read_image(self, name: str, tag: str) -> Tuple[Manifest, ImageConfig]:
         d = self._image_dir(name)
@@ -412,7 +430,7 @@ class LayerStore:
         """
         report = BuildReport()
         t0 = time.perf_counter()
-        fsyncs0 = self.fsyncs
+        fsyncs0, commits0 = self.fsyncs, self.commits
         parent_layers: List[LayerDescriptor] = []
         if parent is not None and self.has_image(*parent):
             pm, _ = self.read_image(*parent)
@@ -489,6 +507,7 @@ class LayerStore:
                             config_id=config.config_id)
         self.write_image(manifest, config)
         report.fsyncs = self.fsyncs - fsyncs0
+        report.manifest_commits = self.commits - commits0
         report.wall_seconds = time.perf_counter() - t0
         return manifest, config, report
 
@@ -570,7 +589,6 @@ class LayerStore:
     def import_image(self, bundle: bytes) -> Tuple[str, str]:
         """`docker load` counterpart."""
         with tarfile.open(fileobj=io.BytesIO(bundle), mode="r") as tar:
-            names = tar.getnames()
             manifest = Manifest.from_json(
                 json.loads(tar.extractfile("manifest.json").read()))
             config = ImageConfig.from_json(

@@ -16,7 +16,6 @@ tests/test_ft.py.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 

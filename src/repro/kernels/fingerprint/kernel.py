@@ -25,7 +25,6 @@ Matches core.fingerprint bit-for-bit (same constants, same mix).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ import subprocess
 import sys
 import time
 import traceback
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -50,7 +50,7 @@ def run_cell(arch: str, shape: str, mesh_name: str,
     from ..roofline import analyze_compiled
     from ..train import TrainConfig, make_decode_step, make_prefill_step, \
         make_train_step
-    from .mesh import make_production_mesh
+    from .mesh import make_production_mesh, mesh_context
 
     cfg = get_config(arch)
     if extra:
@@ -61,7 +61,7 @@ def run_cell(arch: str, shape: str, mesh_name: str,
     specs = input_specs(cfg, shape)
     t0 = time.perf_counter()
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if sp.kind == "train":
             tcfg = TrainConfig(recipe=recipe_override,
                                grad_reduce_dtype=grad_reduce_dtype,

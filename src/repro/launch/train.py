@@ -25,7 +25,7 @@ from ..ft import Watchdog
 from ..models import init_params
 from ..optim import AdamWConfig, init_opt_state
 from ..train import TrainConfig, make_train_step
-from .mesh import make_mesh
+from .mesh import make_mesh, mesh_context
 
 
 def main() -> None:
@@ -70,7 +70,7 @@ def main() -> None:
             print(f"[train] resumed from step {start_step}")
 
     ds = SyntheticTokens(cfg.vocab, batch=args.batch, seq=args.seq)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         bundle = make_train_step(cfg, tcfg, mesh, args.batch, args.seq)
         wd = Watchdog(args.watchdog_s, lambda: print("[watchdog] step hung")) \
             if args.watchdog_s > 0 else None

@@ -18,8 +18,7 @@ q to (B, KVH, G, S, D).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ buffer of ``window`` slots.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +25,8 @@ import jax.numpy as jnp
 from ..sharding.ctx import constrain
 from .attention import attention, attention_decode
 from .config import ModelConfig
-from .layers import (apply_rope, dense, dense_init, gated_mlp, proj_heads,
-                     rms_norm, trunc_normal, unproj_heads)
+from .layers import (apply_rope, dense, dense_init, proj_heads, rms_norm,
+                     trunc_normal, unproj_heads)
 from .moe import moe_ffn
 from .ssm import (causal_conv, causal_conv_step, ssd_chunked,
                   ssd_decode_step)
@@ -221,9 +221,10 @@ def _moe_local(cfg: ModelConfig, p: Dict, h: jax.Array, spec):
     capacity buffer; zero collectives inside the MoE (the scatter/sort/
     psum pathologies of the SPMD-auto path disappear). Used when the
     rule table provides "moe_local" (small-expert archs under sp)."""
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+    from ..sharding.ctx import current_mesh, shard_map_fn
+    shard_map = shard_map_fn()
+    mesh = current_mesh()
     axes = tuple(a for e in tuple(spec) if e is not None
                  for a in (e if isinstance(e, tuple) else (e,)))
 
@@ -235,9 +236,12 @@ def _moe_local(cfg: ModelConfig, p: Dict, h: jax.Array, spec):
         aux = jax.lax.pmean(aux, axes)
         return y.reshape(B, S, d), aux
 
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(spec, P(), P(), P(), P()),
-                   out_specs=(spec, P()), check_rep=False)
+    specs = dict(in_specs=(spec, P(), P(), P(), P()),
+                 out_specs=(spec, P()))
+    try:
+        fn = shard_map(body, mesh=mesh, check_rep=False, **specs)
+    except TypeError:     # newer jax renamed check_rep -> check_vma
+        fn = shard_map(body, mesh=mesh, check_vma=False, **specs)
     return fn(h, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 
@@ -356,9 +360,7 @@ def decode_mla_block(cfg: ModelConfig, p: Dict, cache: Dict,
     """Absorbed MLA decode: attention runs in latent space; the cache is the
     (kv_lora_rank + rope) latent — MLA's memory advantage."""
     B, d = x_t.shape
-    H = cfg.n_heads
     nope, rope, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    kr = cfg.kv_lora_rank
     h = rms_norm(x_t, p["attn_norm"], cfg.rms_eps)[:, None]     # (B,1,d)
     pos_b = jnp.broadcast_to(pos, (B, 1))
     q, c_kv, k_rope = _mla_qkv(cfg, p, h, pos_b)

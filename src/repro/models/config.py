@@ -10,8 +10,8 @@ Families:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)

@@ -10,7 +10,6 @@ The LM head / CE loss is computed *chunked over the sequence* so the full
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

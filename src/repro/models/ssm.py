@@ -160,7 +160,6 @@ def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 def causal_conv_step(state: jax.Array, x_t: jax.Array, w: jax.Array,
                      b: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """state: (B, K-1, *C) last inputs; x_t: (B, *C). -> (state', y)."""
-    K = w.shape[-1]
     full = jnp.concatenate([state, x_t[:, None]], axis=1)   # (B, K, *C)
     wt = jnp.moveaxis(w, -1, 0).astype(x_t.dtype)           # (K, *C)
     y = jnp.sum(full * wt[None], axis=1) + b.astype(x_t.dtype)

@@ -7,7 +7,7 @@ f32 moments. With ZeRO-1 the master/m/v trees are sharded over the DP axes
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

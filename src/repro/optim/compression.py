@@ -15,12 +15,21 @@ roofline collective term measures the byte reduction from the lowered HLO.
 """
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 BLOCK = 2048
+
+
+def _axis_size(name):
+    """jax.lax.axis_size where it exists; psum(1) on older jax (0.4.x) —
+    the counting psum constant-folds at trace time inside shard_map."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
 
 
 def _blocks(x: jax.Array) -> jax.Array:
@@ -59,7 +68,7 @@ def compressed_psum(g: jax.Array, err: jax.Array, axis_names
         axis_names = (axis_names,)
     replicas = 1
     for a in axis_names:
-        replicas *= jax.lax.axis_size(a)
+        replicas *= _axis_size(a)
 
     target = _blocks(g) + _blocks(err)
     local_scale = jnp.max(jnp.abs(target), axis=1) / 127.0

@@ -15,9 +15,8 @@ Features:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +28,8 @@ from ..models.config import ModelConfig
 from ..optim import AdamWConfig, apply_update, init_opt_state
 from ..sharding.ctx import activation_ctx
 from ..sharding.rules import (Recipe, activation_rules, batch_specs,
-                              cache_specs, dp_axes, opt_specs,
-                              param_specs_tree, recipe_for, zero_axes_for)
+                              cache_specs, opt_specs, param_specs_tree,
+                              recipe_for, zero_axes_for)
 
 
 @dataclass(frozen=True)
@@ -157,7 +156,6 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh, global_batch: int,
         return cache, logits
 
     in_sh = [_named(mesh, pspec), NamedSharding(mesh, bspec["tokens"])]
-    static = {}
     if cfg.n_prefix_embeds:
         in_sh.append(NamedSharding(mesh, bspec["prefix_embeds"]))
     out_sh = (_named(mesh, cspec), None)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import CheckpointManager, CheckpointPolicy
 from repro.ckpt.manager import flatten_tree, unflatten_tree

@@ -1,5 +1,4 @@
 """Fault tolerance: crash atomicity, restart-resume, straggler, watchdog."""
-import os
 import time
 
 import jax
@@ -33,7 +32,6 @@ def test_crash_mid_save_preserves_previous(tmp_path):
     # params changed => fall-through reaches the dying RUN provider.
     params2 = {"w": params["w"] + 1.0}
     payloads = mgr._payloads(params2, opt, 1)
-    from repro.core import Instruction
     ins = mgr._instructions()
 
     def dying_provider():
@@ -114,8 +112,8 @@ def test_elastic_reshard_restore(tmp_path):
                             CheckpointPolicy(async_write=False,
                                              chunk_bytes=128))
     mgr.save(3, params, opt)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import PartitionSpec as P
     out = reshard_restore(mgr, mesh, {"w": P()}, None)
     assert out is not None

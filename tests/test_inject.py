@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import (Instruction, LayerStore, PushRejected,
-                        StructureChangeError, diff_layer_host, inject_image,
+                        StructureChangeError, diff_layer_host,
                         inject_payload_update, push)
 
 

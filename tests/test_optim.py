@@ -1,5 +1,4 @@
 """Optimizer: AdamW reference math, schedule, gradient compression."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,9 +1,7 @@
 """Core layer store: build, cache, fall-through, load, decompose, verify."""
 import numpy as np
-import pytest
 
-from repro.core import (Instruction, LayerStore, content_checksum,
-                        diff_layer_host)
+from repro.core import Instruction, LayerStore
 
 
 def mk_store(tmp_path, chunk=1024):

@@ -71,7 +71,7 @@ def test_injection_equivalence_and_isolation(tmp_path_factory, pe):
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 5000), st.integers(0, 2**31))
 def test_chunking_roundtrip(n, seed):
-    from repro.core import bytes_to_tensor, chunk_tensor, tensor_to_bytes
+    from repro.core import bytes_to_tensor, chunk_tensor
     rng = np.random.default_rng(seed)
     arr = rng.standard_normal(n).astype(np.float32)
     rec, pairs = chunk_tensor("x", arr, 512)

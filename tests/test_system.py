@@ -3,7 +3,6 @@ resume + serving — the paper's technique embedded in a real training loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import CheckpointManager, CheckpointPolicy
 from repro.configs import get_smoke_config
