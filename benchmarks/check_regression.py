@@ -40,6 +40,12 @@ RATIO_GATES = [
      "k4.speedup_wall", None),
     ("multilayer_inject.json", "BENCH_multilayer_inject.json",
      "k8.speedup_wall", None),
+    # delta push vs seed O(image) push: the ratio is dominated by the
+    # remote's deep re-verification (SHA throughput — machine-portable);
+    # the wide threshold absorbs fsync noise while still catching the
+    # delta path losing its advantage (the 1.0 floor below always applies)
+    ("push_delta.json", "BENCH_push_delta.json", "k4.speedup_wall", 2.0),
+    ("push_delta.json", "BENCH_push_delta.json", "k8.speedup_wall", 2.0),
 ]
 
 # (results file, dotted path, exact expected value)
@@ -48,6 +54,15 @@ INVARIANTS = [
     ("multilayer_inject.json", "k8.batched.rekey_walks", 1),
     ("multilayer_inject.json", "k1.batched.manifest_commits", 1),
     ("multilayer_inject.json", "k8.batched.manifest_commits", 1),
+    # the remote deep-verified ONLY the k new-content layers — everything
+    # else rode the re-key table or was already held
+    ("push_delta.json", "k1.delta.layers_deep_verified", 1),
+    ("push_delta.json", "k8.delta.layers_deep_verified", 8),
+    # wire bytes within 1.25x of the changed-chunk bytes
+    ("push_delta.json", "k1.delta.within_budget", True),
+    ("push_delta.json", "k8.delta.within_budget", True),
+    # the remote passes a full, independent deep verification post-push
+    ("push_delta.json", "k8.delta.remote_deep_verify_clean", True),
 ]
 
 

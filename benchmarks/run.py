@@ -404,6 +404,134 @@ def bench_multilayer_inject(trials: int) -> dict:
     return out
 
 
+def bench_push_delta(trials: int) -> dict:
+    """§III.C redeployment (this repo's delta-replication tentpole): push a
+    freshly-injected 512-leaf checkpoint-style image (8 content layers x 64
+    leaves) to a remote that already holds the previous version. Seed
+    ``push`` walks every layer, rewrites every descriptor and deep-verifies
+    the WHOLE image at the destination (O(image)); ``push_delta``
+    negotiates the have-set in batched set-difference exchanges, streams
+    only the changed chunks over the pipelined transfer and verifies
+    incrementally (O(changed bytes)). k = how many of the image's content
+    layers changed (the last k — the checkpoint save shape, where every
+    param layer is touched; deeper-prefix edits only add re-keyed
+    descriptors, still O(#layers) metadata). Gated claims, recorded per k:
+    wall speedup, wire amplification (bytes_sent / changed-chunk bytes,
+    must stay within 1.25x), the remote deep-verified ONLY the k new
+    layers, and an untimed independent ``verify_image(deep=True)`` at the
+    remote passes afterwards.
+    """
+    from repro.core import (Instruction, LayerStore, diff_image,
+                            inject_image_multi, push, push_delta)
+    from .scenarios import _edit_chunks, _gen
+
+    n_layers, leaves_per_layer, edits_per_layer = 8, 64, 2
+    leaf_bytes = chunk_bytes = 128 << 10
+    ins = [Instruction("FROM", "base", "config")]
+    payloads = {}
+    for i in range(n_layers):
+        key = f"layer{i}"
+        ins.append(Instruction("COPY", key, "content"))
+        payloads[key] = {
+            f"l{j:03d}": _gen(1000 + i * leaves_per_layer + j, leaf_bytes)
+            for j in range(leaves_per_layer)}
+    ins.append(Instruction("CMD", "serve", "config"))
+
+    out = {"n_layers": n_layers, "leaves": n_layers * leaves_per_layer,
+           "leaf_bytes": leaf_bytes, "chunk_bytes": chunk_bytes,
+           "trials": trials}
+    root = tempfile.mkdtemp(prefix="lc_push_")
+    try:
+        for k in (1, 2, 4, 8):
+            keys = [f"layer{i}" for i in range(n_layers - k, n_layers)]
+            # registry stores: no build-cache fingerprint sidecar (that is
+            # a builder concern; a serving registry never runs COPY checks)
+            store = LayerStore(os.path.join(root, f"src{k}"),
+                               chunk_bytes=chunk_bytes,
+                               record_fingerprints=False)
+            current = {key: dict(tree) for key, tree in payloads.items()}
+            prov = {key: (lambda v=v: v) for key, v in current.items()}
+            store.build_image("app", "v1", ins, prov)
+            remote_seed = LayerStore(os.path.join(root, f"rs{k}"),
+                                     chunk_bytes=chunk_bytes,
+                                     record_fingerprints=False)
+            remote_delta = LayerStore(os.path.join(root, f"rd{k}"),
+                                      chunk_bytes=chunk_bytes,
+                                      record_fingerprints=False)
+            push(store, remote_seed, "app", "v1")
+            push_delta(store, remote_delta, "app", "v1")
+
+            seed_t, delta_t, amp = [], [], []
+            s_stats = d_stats = None
+            tag, changed_bytes = "v1", 0
+            for tr in range(trials):
+                # a few fresh chunk edits per changed layer, applied on top
+                # of the running state (never reverting an earlier edit)
+                for key in keys:
+                    current[key] = dict(current[key])
+                    for e in range(edits_per_layer):
+                        leaf = f"l{(tr * edits_per_layer + e) % leaves_per_layer:03d}"
+                        current[key][leaf] = _edit_chunks(
+                            current[key][leaf], 1, chunk_bytes, seed=tr + 1)
+                m, _ = store.read_image("app", tag)
+                layers = [store.read_layer(lid) for lid in m.layer_ids]
+                diffs = diff_image(layers,
+                                   {key: current[key] for key in keys})
+                new_tag = f"t{tr + 1}"
+                inject_image_multi(store, "app", tag, new_tag, diffs)
+                changed_bytes = sum(len(e.data) for d in diffs.values()
+                                    for e in d.edits)
+                tag = new_tag
+
+                t0 = time.perf_counter()
+                s_stats = push(store, remote_seed, "app", tag)
+                seed_t.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                d_stats = push_delta(store, remote_delta, "app", tag)
+                delta_t.append(time.perf_counter() - t0)
+                amp.append(d_stats.bytes_sent / max(changed_bytes, 1))
+            s, d = np.asarray(seed_t), np.asarray(delta_t)
+            amp_median = float(np.median(np.asarray(amp)))
+            # the acceptance checks, run INDEPENDENTLY of the push path
+            remote_clean = remote_delta.verify_image("app", tag,
+                                                     deep=True) == []
+            out[f"k{k}"] = {
+                "changed_bytes": changed_bytes,
+                "seed": {
+                    "median_s": float(np.median(s)),
+                    "mean_s": float(s.mean()),
+                    "bytes_sent": s_stats.bytes_sent,
+                    "bytes_deduped": s_stats.bytes_deduped,
+                    "layers_deep_verified": s_stats.layers_deep_verified,
+                },
+                "delta": {
+                    "median_s": float(np.median(d)),
+                    "mean_s": float(d.mean()),
+                    "bytes_sent": d_stats.bytes_sent,
+                    "bytes_payload": d_stats.bytes_payload,
+                    "bytes_meta": d_stats.bytes_meta,
+                    "bytes_deduped": d_stats.bytes_deduped,
+                    "layers_deep_verified": d_stats.layers_deep_verified,
+                    "layers_rekey_verified": d_stats.layers_rekey_verified,
+                    "blobs_hashed_remote": d_stats.blobs_hashed_remote,
+                    "wire_amplification": amp_median,
+                    "within_budget": bool(amp_median <= 1.25),
+                    "remote_deep_verify_clean": bool(remote_clean),
+                },
+                "speedup_wall": float(np.median(s) / np.median(d)),
+            }
+            print(f"push_k{k}_seed,{np.median(s) * 1e6:.1f},"
+                  f"deep={s_stats.layers_deep_verified} "
+                  f"bytes={s_stats.bytes_sent}")
+            print(f"push_k{k}_delta,{np.median(d) * 1e6:.1f},"
+                  f"speedup={out[f'k{k}']['speedup_wall']:.2f}x "
+                  f"amp={amp_median:.3f} "
+                  f"deep={d_stats.layers_deep_verified}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
 def bench_fingerprint(trials: int) -> dict:
     """Change-detector throughput: host SHA-256 vs on-device fingerprint
     (jnp path; the Pallas kernel is the TPU-target implementation)."""
@@ -452,6 +580,7 @@ def bench_roofline() -> dict:
 BASELINES = {
     "incremental_save": "BENCH_incremental_save.json",
     "multilayer_inject": "BENCH_multilayer_inject.json",
+    "push_delta": "BENCH_push_delta.json",
 }
 
 
@@ -475,6 +604,7 @@ def main() -> None:
         "ckpt_cadence": lambda: bench_ckpt_cadence(trials),
         "incremental_save": lambda: bench_incremental_save(trials),
         "multilayer_inject": lambda: bench_multilayer_inject(trials),
+        "push_delta": lambda: bench_push_delta(max(trials // 3, 5)),
         "fingerprint": lambda: bench_fingerprint(trials),
         "roofline": bench_roofline,
     }

@@ -45,16 +45,15 @@ checkpoint intact — tests/test_ft.py kills a save mid-flight to prove it.
 """
 from __future__ import annotations
 
-import os
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import (BuildReport, Instruction, LayerStore, diff_image,
-                    fingerprint_tree, fingerprint_tree_packed,
-                    inject_image_multi)
+from ..core import (BuildReport, Instruction, LayerStore, PushStats,
+                    diff_image, fingerprint_tree, fingerprint_tree_packed,
+                    inject_image_multi, push_delta)
 
 
 def flatten_tree(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -91,6 +90,37 @@ def unflatten_tree(flat: Dict[str, np.ndarray]) -> Any:
             d = d.setdefault(p, {})
         d[parts[-1]] = v
     return root
+
+
+# Step-tag helpers, shared by CheckpointManager and serve.CheckpointFollower
+# so the trainer and a serving replica can never disagree about the tag
+# format or the retention semantics.
+
+def latest_step(store: LayerStore, image: str,
+                fresh: bool = False) -> Optional[int]:
+    """Newest step number among an image's ``step-NNNNNNNN`` tags.
+    ``fresh`` bypasses the store's tag cache (needed when another process
+    commits the tags)."""
+    tags = [t for t in store.list_tags(image, fresh=fresh)
+            if t.startswith("step-")]
+    return max((int(t.split("-")[1]) for t in tags), default=None)
+
+
+def prune_steps(store: LayerStore, image: str, keep: int) -> bool:
+    """Retention + reclamation: drop step tags beyond the ``keep`` newest,
+    then mark-and-sweep the store so their exclusive blobs/layers are
+    actually deleted (unbounded disk growth otherwise). Returns whether
+    anything was removed. ``keep<=0`` keeps everything."""
+    if keep <= 0:
+        return False
+    tags = sorted(t for t in store.list_tags(image)
+                  if t.startswith("step-"))
+    removed = False
+    for t in tags[:-keep]:
+        removed = store.remove_image(image, t) or removed
+    if removed:
+        store.gc()
+    return removed
 
 
 @dataclass
@@ -153,9 +183,9 @@ class CheckpointManager:
         return f"step-{step:08d}"
 
     def latest_step(self) -> Optional[int]:
-        tags = [t for t in self.store.list_tags(self.IMAGE)
-                if t.startswith("step-")]
-        return max((int(t.split("-")[1]) for t in tags), default=None)
+        # list_tags is cached in the store (invalidated at the manifest
+        # commit / image removal), so polling this every save is free.
+        return latest_step(self.store, self.IMAGE)
 
     def wait(self) -> Optional[BuildReport]:
         if self._pending is not None:
@@ -257,16 +287,27 @@ class CheckpointManager:
         return report
 
     def _gc(self) -> None:
-        tags = sorted(t for t in self.store.list_tags(self.IMAGE)
-                      if t.startswith("step-"))
-        for t in tags[:-self.policy.keep]:
-            # old manifests removed; blobs stay dedup'd (a real deployment
-            # runs a mark-and-sweep; references make deletion safe)
-            try:
-                os.remove(os.path.join(self.store.root, "images",
-                                       self.IMAGE, f"{t}.json"))
-            except OSError:
-                pass
+        """Retention (see ``prune_steps``). Runs post-commit on the save
+        thread, so no batch transaction is open; LayerStore.gc additionally
+        refuses to sweep anything still dirty in an open one."""
+        prune_steps(self.store, self.IMAGE, self.policy.keep)
+
+    # --------------------------------------------------------- replication
+    def replicate(self, remote, step: Optional[int] = None
+                  ) -> Optional[PushStats]:
+        """Ship a checkpoint to a serving/registry store as a DELTA: one
+        have-set negotiation + only the chunks the remote is missing cross
+        the wire (core.registry.push_delta). After an incremental save this
+        is O(changed bytes) — call it at the save cadence to keep a serving
+        replica hot. ``remote`` is a LayerStore or a filesystem path."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        if not isinstance(remote, LayerStore):
+            remote = LayerStore(str(remote),
+                                chunk_bytes=self.policy.chunk_bytes)
+        return push_delta(self.store, remote, self.IMAGE, self.tag_of(step))
 
     # ------------------------------------------------------------ restore
     def restore(self, step: Optional[int] = None

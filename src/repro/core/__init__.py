@@ -4,9 +4,11 @@ injection method"), checksum re-keying, clone-before-inject, dedup and a
 verifying registry — Docker's layer system re-built for JAX training state.
 """
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, bytes_to_tensor,
-                      chunk_tensor, hash_chunks, iter_chunks, sha256_hex,
-                      tensor_chunk_bytes, tensor_to_bytes)
-from .diff import (ChunkEdit, LayerDiff, diff_image,
+                      chunk_tensor, hash_chunks, hash_pool, iter_chunks,
+                      sha256_hex, tensor_chunk_bytes, tensor_to_bytes)
+from .delta import (DeltaBundle, DeltaFormatError, decode_delta,
+                    encode_delta)
+from .diff import (ChunkEdit, LayerDiff, diff_image, diff_manifests,
                    diff_layer_fingerprint, diff_layer_host,
                    locate_changed_layers)
 from .fingerprint import (chunk_geometry, fingerprint_chunk_bytes_ref,
@@ -19,13 +21,17 @@ from .inject import (StructureChangeError, apply_edits, clone_layer,
 from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
                        chain_checksum, content_checksum,
                        injection_history_entry, new_uuid)
-from .registry import PushRejected, PushStats, pull, push
+from .registry import (DeltaReceiver, HaveSet, PushRejected, PushStats,
+                       export_delta, import_delta, pull, pull_delta, push,
+                       push_delta)
 from .store import BuildReport, LayerStore
 
 __all__ = [
     "DEFAULT_CHUNK_BYTES", "TensorRecord", "bytes_to_tensor", "chunk_tensor",
-    "hash_chunks", "iter_chunks", "sha256_hex", "tensor_chunk_bytes",
-    "tensor_to_bytes", "ChunkEdit", "LayerDiff", "diff_image",
+    "hash_chunks", "hash_pool", "iter_chunks", "sha256_hex",
+    "tensor_chunk_bytes", "tensor_to_bytes", "DeltaBundle",
+    "DeltaFormatError", "decode_delta", "diff_manifests", "encode_delta",
+    "ChunkEdit", "LayerDiff", "diff_image",
     "diff_layer_fingerprint", "diff_layer_host", "locate_changed_layers",
     "chunk_geometry", "fingerprint_chunk_bytes_ref", "fingerprint_chunks",
     "fingerprint_chunks_ref", "fingerprint_tree", "fingerprint_tree_packed",
@@ -34,5 +40,7 @@ __all__ = [
     "inject_image_multi", "inject_payload_update", "ImageConfig",
     "Instruction", "LayerDescriptor", "Manifest", "chain_checksum",
     "content_checksum", "injection_history_entry", "new_uuid",
-    "PushRejected", "PushStats", "pull", "push", "BuildReport", "LayerStore",
+    "DeltaReceiver", "HaveSet", "PushRejected", "PushStats", "export_delta",
+    "import_delta", "pull", "pull_delta", "push", "push_delta",
+    "BuildReport", "LayerStore",
 ]

@@ -1,0 +1,113 @@
+"""DeltaBundle — the O(changed-bytes) redeployment wire format.
+
+Every batched injection commit (``inject_image_multi``) changes an image by
+a small, precisely-known delta: the injected chunk blobs, the cloned-layer
+descriptors, the downstream re-key table and a fresh manifest/config. A
+``DeltaBundle`` packages exactly that — nothing else crosses the wire on a
+push — which is what turns §III.C redeployment from O(image) into
+O(changed bytes) (cf. Charliecloud's pack-style build-cache transfer,
+arXiv:2309.00166).
+
+Wire layout (``encode_delta``/``decode_delta``)::
+
+    b"RDB1" | uint64 header_len | header JSON | blob payloads (index order)
+
+The header carries the manifest, config, layer descriptors, the re-key
+table ({new_layer_id: remote_layer_id} for content-identical clones) and a
+blob index [[sha256, length], ...]; payloads follow concatenated in index
+order. Decoding verifies each payload against its content address, so a
+bundle is self-checking — the receiving side never has to trust lengths or
+offsets.
+
+``core.diff.diff_manifests`` computes the delta between two *stored* images
+at the metadata level (family + content-checksum matching): the basis for
+offline bundles (``registry.export_delta``) when no live remote is
+available to negotiate a have-set with.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from .chunker import sha256_hex
+from .manifest import ImageConfig, LayerDescriptor, Manifest, dumps
+
+_MAGIC = b"RDB1"
+
+
+class DeltaFormatError(ValueError):
+    """Raised when a bundle fails structural or content-address checks."""
+
+
+@dataclass
+class DeltaBundle:
+    """One image transition, self-contained: apply on top of whatever the
+    receiver already holds (``rekey`` names the holdings it may reuse)."""
+
+    name: str
+    tag: str                            # the tag this bundle produces
+    base_tag: str = ""                  # provenance only ("" = unknown/full)
+    manifest: Manifest = None
+    config: ImageConfig = None
+    layers: List[LayerDescriptor] = field(default_factory=list)
+    # new_layer_id -> layer_id the receiver already holds with the SAME
+    # content checksum (a re-keyed clone): receiving side can skip deep
+    # verification for these — content identical, only the chain moved.
+    rekey: Dict[str, str] = field(default_factory=dict)
+    blobs: Dict[str, bytes] = field(default_factory=dict)
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(len(b) for b in self.blobs.values())
+
+
+def encode_delta(bundle: DeltaBundle) -> bytes:
+    index = sorted(bundle.blobs.keys())
+    header = {
+        "name": bundle.name,
+        "tag": bundle.tag,
+        "base_tag": bundle.base_tag,
+        "manifest": bundle.manifest.to_json(),
+        "config": bundle.config.to_json(),
+        "layers": [layer.to_json() for layer in bundle.layers],
+        "rekey": dict(bundle.rekey),
+        "blob_index": [[h, len(bundle.blobs[h])] for h in index],
+    }
+    head = dumps(header).encode()
+    parts = [_MAGIC, struct.pack("<Q", len(head)), head]
+    parts.extend(bundle.blobs[h] for h in index)
+    return b"".join(parts)
+
+
+def decode_delta(data: bytes) -> DeltaBundle:
+    if len(data) < 12 or data[:4] != _MAGIC:
+        raise DeltaFormatError("not a delta bundle (bad magic / truncated)")
+    (head_len,) = struct.unpack("<Q", data[4:12])
+    if 12 + head_len > len(data):
+        raise DeltaFormatError("truncated bundle header")
+    header = json.loads(data[12:12 + head_len])
+    blobs: Dict[str, bytes] = {}
+    off = 12 + head_len
+    for h, length in header["blob_index"]:
+        piece = data[off:off + length]
+        if len(piece) != length:
+            raise DeltaFormatError(f"truncated payload for blob {h[:12]}")
+        if sha256_hex(piece) != h:
+            raise DeltaFormatError(f"payload does not match address {h[:12]}")
+        blobs[h] = piece
+        off += length
+    if off != len(data):
+        raise DeltaFormatError("trailing bytes after last payload")
+    manifest = Manifest.from_json(header["manifest"])
+    return DeltaBundle(
+        name=header["name"],
+        tag=header["tag"],
+        base_tag=header.get("base_tag", ""),
+        manifest=manifest,
+        config=ImageConfig.from_json(header["config"]),
+        layers=[LayerDescriptor.from_json(d) for d in header["layers"]],
+        rekey=dict(header.get("rekey", {})),
+        blobs=blobs,
+    )

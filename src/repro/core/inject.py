@@ -64,6 +64,9 @@ from .store import BuildReport, LayerStore
 # Injection commits keep at most this many trailing history entries in the
 # ImageConfig (the full per-save audit lives in the returned BuildReport).
 _HISTORY_CAP = 64
+# ... and each entry's delta record lists at most this many chunk ids
+# (n_chunks records the true count; see the commit-phase comment).
+_DELTA_CHUNKS_CAP = 256
 
 
 class StructureChangeError(ValueError):
@@ -220,8 +223,14 @@ def inject_image_multi(store: LayerStore,
             entry["bytes_written"] += report.bytes_serialized - bytes0
 
         # Phase B — C3: the single downstream re-key walk, consuming the
-        # pre-resolved derivation plan (rederive_ids).
+        # pre-resolved derivation plan (rederive_ids). ``delta`` records
+        # this commit's replication unit (core.delta): old->new layer maps
+        # by change kind plus the chunk ids written — what a delta push of
+        # this commit has to carry.
         report.rekey_walks += 1
+        delta = {"base": [name, tag], "injected": {}, "rederived": {},
+                 "rekeyed": {}}
+        delta_chunks = {e.new_hash for d in live.values() for e in d.edits}
         new_layers: List[LayerDescriptor] = []
         parent_chain: Optional[str] = None
         dirty = False   # once any upstream id changed, downstream re-keys
@@ -233,6 +242,7 @@ def inject_image_multi(store: LayerStore,
                                              ins.text)
                 store.write_layer(clone)
                 new_layers.append(clone)
+                delta["injected"][clone.layer_id] = layer.layer_id
                 dirty = True
             elif layer.layer_id in rederive_ids:
                 # Scenario-4: a derived layer re-runs its derivation — once
@@ -249,6 +259,9 @@ def inject_image_multi(store: LayerStore,
                 entry["chunks_written"] += report.chunks_written - chunks0
                 entry["bytes_written"] += report.bytes_serialized - bytes0
                 new_layers.append(rebuilt)
+                delta["rederived"][rebuilt.layer_id] = layer.layer_id
+                delta_chunks.update(h for rec in rebuilt.records
+                                    for h in rec.chunks)
                 dirty = True
             elif dirty:
                 # Downstream of a change: RE-KEY only (chain checksum),
@@ -258,6 +271,7 @@ def inject_image_multi(store: LayerStore,
                                                rekeyed.checksum, ins.text)
                 store.write_layer(rekeyed)
                 new_layers.append(rekeyed)
+                delta["rekeyed"][rekeyed.layer_id] = layer.layer_id
                 report.layers_rekeyed += 1
                 report.layer_entry(layer.layer_id)["rekeyed"] += 1
             else:
@@ -269,10 +283,18 @@ def inject_image_multi(store: LayerStore,
         # History is capped: the config is copied forward and re-fsynced on
         # every commit, so an unbounded audit trail would quietly turn the
         # O(delta) save into O(total saves) of config serialization.
+        # The chunk-id list in the history record is CAPPED: the config is
+        # copied forward and re-fsync'd on every commit, so a save touching
+        # thousands of chunks must not turn the audit trail into megabytes
+        # of hashes x 64 retained entries. n_chunks always has the truth;
+        # replication never reads this list (push_delta negotiates a live
+        # have-set, export_delta re-diffs via diff_manifests).
+        delta["n_chunks"] = len(delta_chunks)
+        delta["chunks"] = sorted(delta_chunks)[:_DELTA_CHUNKS_CAP]
         total_edits = sum(len(d.edits) for d in live.values())
         history = (config.history +
-                   [injection_history_entry(report.per_layer,
-                                            total_edits)])[-_HISTORY_CAP:]
+                   [injection_history_entry(report.per_layer, total_edits,
+                                            delta=delta)])[-_HISTORY_CAP:]
         new_config = ImageConfig(
             config_id=new_uuid(), arch=config.arch,
             version=config.version + 1,

@@ -75,16 +75,27 @@ def chain_checksum(parent_chain: Optional[str], own_content: str,
 
 
 def injection_history_entry(per_layer: Dict[str, Dict[str, int]],
-                            total_edits: int) -> dict:
+                            total_edits: int,
+                            delta: Optional[dict] = None) -> dict:
     """ImageConfig history record for ONE batched injection commit.
 
     ``per_layer`` mirrors ``BuildReport.per_layer`` (keyed by the source
     image's layer ids), so the image history itself attributes which layer
     cost what in the batch — the audit trail for the multi-layer
-    transactional unit."""
-    return {"instruction": "INJECT", "edits": int(total_edits),
-            "per_layer": {lid: dict(entry)
-                          for lid, entry in per_layer.items()}}
+    transactional unit.
+
+    ``delta`` is the commit's DeltaBundle metadata (see core.delta): the
+    base tag, the old->new layer maps split by how each layer changed
+    (injected / rederived / rekeyed — the downstream re-key table), and the
+    chunk ids written by this commit. It makes every injection commit a
+    self-describing replication unit: a registry can reconstruct what a
+    push must carry without re-diffing the stores."""
+    entry = {"instruction": "INJECT", "edits": int(total_edits),
+             "per_layer": {lid: dict(entry)
+                           for lid, entry in per_layer.items()}}
+    if delta is not None:
+        entry["delta"] = delta
+    return entry
 
 
 @dataclass

@@ -180,6 +180,10 @@ class LayerStore:
         # re-parse. Bounded FIFO; blobs/manifests are NOT cached.
         self._layer_cache: "dict[str, LayerDescriptor]" = {}
         self._layer_cache_cap = 512
+        # Tag listings are re-requested on every save (latest_step) but only
+        # change at a manifest commit / image removal — cache per image
+        # name, invalidated at exactly those two points.
+        self._tags_cache: Dict[str, List[str]] = {}
         for sub in ("blobs/sha256", "layers", "images"):
             os.makedirs(os.path.join(root, sub), exist_ok=True)
 
@@ -242,6 +246,20 @@ class LayerStore:
         with open(self._blob_path(h), "rb") as f:
             return f.read()
 
+    def drop_blob(self, h: str) -> bool:
+        """Delete one blob (caller must know it is unreferenced — e.g. a
+        torn orphan of a crashed push, detected by content-address
+        mismatch). Returns False if it didn't exist."""
+        path = self._blob_path(h)
+        try:
+            os.remove(path)
+        except OSError:
+            return False
+        self._durable_paths.discard(path)
+        with self._dirty_lock:
+            self._dirty_files.discard(path)
+        return True
+
     # --------------------------------------------------------------- layers
     def _layer_path(self, layer_id: str) -> str:
         return os.path.join(self.root, "layers", f"{layer_id}.json")
@@ -251,9 +269,14 @@ class LayerStore:
             self._layer_cache.pop(next(iter(self._layer_cache)))
         self._layer_cache[layer.layer_id] = layer
 
-    def write_layer(self, layer: LayerDescriptor) -> None:
+    def write_layer(self, layer: LayerDescriptor,
+                    encoded: Optional[bytes] = None) -> None:
+        """``encoded`` lets callers that already serialized the descriptor
+        (e.g. the registry receive path, which counts its wire bytes) skip
+        a second JSON encode — it must be ``dumps(layer.to_json())``."""
         self._write_file(self._layer_path(layer.layer_id),
-                         dumps(layer.to_json()).encode())
+                         encoded if encoded is not None
+                         else dumps(layer.to_json()).encode())
         self._cache_layer(layer)
 
     def read_layer(self, layer_id: str, use_cache: bool = True
@@ -289,6 +312,7 @@ class LayerStore:
                       dumps(manifest.to_json()).encode())
         self.fsyncs += 2
         self.commits += 1
+        self._tags_cache.pop(manifest.name, None)
 
     def read_image(self, name: str, tag: str) -> Tuple[Manifest, ImageConfig]:
         d = self._image_dir(name)
@@ -301,15 +325,34 @@ class LayerStore:
     def has_image(self, name: str, tag: str) -> bool:
         return os.path.exists(os.path.join(self.root, "images", name, f"{tag}.json"))
 
-    def list_tags(self, name: str) -> List[str]:
+    def list_tags(self, name: str, fresh: bool = False) -> List[str]:
+        """``fresh=True`` bypasses the commit-point cache — required when
+        ANOTHER process/store instance may have committed tags (the cache
+        is only invalidated by this instance's own write_image /
+        remove_image)."""
+        cached = None if fresh else self._tags_cache.get(name)
+        if cached is not None:
+            return list(cached)
         d = os.path.join(self.root, "images", name)
         if not os.path.isdir(d):
             return []
         # Skip config blobs explicitly: their filenames are bare hex ids
         # (32-hex uuid4 / 64-hex sha256), never user tags.
-        return sorted(stem for stem in (p[:-5] for p in os.listdir(d)
+        tags = sorted(stem for stem in (p[:-5] for p in os.listdir(d)
                                         if p.endswith(".json"))
                       if not _HEX_ID.fullmatch(stem))
+        self._tags_cache[name] = tags
+        return list(tags)
+
+    def remove_image(self, name: str, tag: str) -> bool:
+        """Unlink a tag's manifest (layers/blobs become GC fodder; run
+        ``gc()`` to reclaim them). Returns False if the tag didn't exist."""
+        try:
+            os.remove(os.path.join(self.root, "images", name, f"{tag}.json"))
+        except OSError:
+            return False
+        self._tags_cache.pop(name, None)
+        return True
 
     # ------------------------------------------------------------ build API
     def build_content_layer(self, instruction: Instruction,
@@ -554,6 +597,101 @@ class LayerStore:
                             problems.append(f"layer {lid}: corrupt blob {h[:12]}")
             parent_chain = layer.chain
         return problems
+
+    # ------------------------------------------------------------------- GC
+    def gc(self) -> Dict[str, int]:
+        """Mark-and-sweep of unreferenced blobs, layer descriptors and
+        config blobs. Mark = everything reachable from a tagged manifest;
+        sweep = the rest, EXCEPT paths belonging to an open
+        batch-durability transaction (written but not yet flushed at a
+        commit) — an un-fsynced blob of an in-flight save must never be
+        deleted out from under its forthcoming manifest. Safe to run at any
+        point between batch-mode transactions (CheckpointManager runs it
+        after each commit); must not run concurrently with a
+        ``durability="full"`` writer, whose pre-commit blobs are not
+        tracked as dirty.
+        """
+        marked_blobs: set = set()
+        marked_layers: set = set()
+        marked_configs: set = set()
+        images_dir = os.path.join(self.root, "images")
+        for name in os.listdir(images_dir):
+            if not os.path.isdir(os.path.join(images_dir, name)):
+                continue
+            for tag in self.list_tags(name):
+                try:
+                    manifest, config = self.read_image(name, tag)
+                except (OSError, ValueError, KeyError):
+                    continue
+                marked_configs.add(config.config_id)
+                for lid in manifest.layer_ids:
+                    marked_layers.add(lid)
+                    if not self.has_layer(lid):
+                        continue
+                    for rec in self.read_layer(lid).records:
+                        marked_blobs.update(rec.chunks)
+
+        with self._dirty_lock:
+            protected = set(self._dirty_files)
+        stats = {"layers_swept": 0, "blobs_swept": 0, "bytes_swept": 0,
+                 "configs_swept": 0}
+
+        layers_dir = os.path.join(self.root, "layers")
+        for fn in os.listdir(layers_dir):
+            lid = fn[:-5]
+            if not fn.endswith(".json") or not _HEX_ID.fullmatch(lid) or \
+                    lid in marked_layers:
+                continue
+            path = os.path.join(layers_dir, fn)
+            if path in protected:
+                continue
+            try:
+                os.remove(path)
+            except OSError:
+                continue
+            self._layer_cache.pop(lid, None)
+            self._durable_paths.discard(path)
+            stats["layers_swept"] += 1
+
+        blob_root = os.path.join(self.root, "blobs", "sha256")
+        for sub in os.listdir(blob_root):
+            d = os.path.join(blob_root, sub)
+            if not os.path.isdir(d):
+                continue
+            for fn in os.listdir(d):
+                if len(fn) != 64 or not _HEX_ID.fullmatch(fn) or \
+                        fn in marked_blobs:
+                    continue
+                path = os.path.join(d, fn)
+                if path in protected:
+                    continue
+                try:
+                    size = os.path.getsize(path)
+                    os.remove(path)
+                except OSError:
+                    continue
+                self._durable_paths.discard(path)
+                stats["blobs_swept"] += 1
+                stats["bytes_swept"] += size
+
+        for name in os.listdir(images_dir):
+            d = os.path.join(images_dir, name)
+            if not os.path.isdir(d):
+                continue
+            for fn in os.listdir(d):
+                stem = fn[:-5] if fn.endswith(".json") else fn
+                if not fn.endswith(".json") or not _HEX_ID.fullmatch(stem) \
+                        or stem in marked_configs:
+                    continue
+                path = os.path.join(d, fn)
+                if path in protected:
+                    continue
+                try:
+                    os.remove(path)
+                except OSError:
+                    continue
+                stats["configs_swept"] += 1
+        return stats
 
     # ------------------------------------------- explicit decompose (export)
     def export_image(self, name: str, tag: str) -> bytes:

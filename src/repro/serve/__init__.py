@@ -1,3 +1,3 @@
-from .engine import Engine, GenerationResult
+from .engine import CheckpointFollower, Engine, GenerationResult
 
-__all__ = ["Engine", "GenerationResult"]
+__all__ = ["CheckpointFollower", "Engine", "GenerationResult"]

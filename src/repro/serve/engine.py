@@ -5,16 +5,24 @@ Single-host convenience wrapper over models.prefill / models.decode_step
 mesh shardings — see launch/serve.py). Supports greedy and temperature
 sampling, per-sequence stop tokens, and batched requests padded to a
 common length.
+
+``CheckpointFollower`` closes the §III.C redeployment loop for serving:
+instead of re-downloading whole checkpoints, it pulls per-save DELTAS from
+the training store (core.registry.pull_delta — one have-set negotiation,
+only changed chunks over the wire, incremental verification) and hands the
+refreshed params to ``Engine.refresh`` — weight hot-swap without
+recompiling the jitted prefill/decode functions.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import LayerStore, PushStats, pull_delta
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
 
@@ -33,6 +41,12 @@ class Engine:
         self._prefill = jax.jit(lambda p, t: prefill(cfg, p, t))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+
+    def refresh(self, params) -> None:
+        """Hot-swap weights (e.g. from CheckpointFollower.poll). Params are
+        a jit argument, so same-shape updates reuse the compiled
+        prefill/decode executables — no retrace, no downtime."""
+        self.params = params
 
     def generate(self, prompts: np.ndarray, steps: int,
                  temperature: float = 0.0, seed: int = 0,
@@ -85,3 +99,53 @@ class Engine:
             slots = (start + np.arange(C_pf)) % C_full
             return full.at[:, :, jnp.asarray(slots)].set(chron)
         return jax.tree.map(one, cache, pf_cache)
+
+
+class CheckpointFollower:
+    """Keep a serving store in sync with a training store by pulling
+    per-save deltas (see module docstring).
+
+    ``remote`` is the training-side LayerStore (or its path); ``local`` is
+    this server's store. ``poll()`` pulls any checkpoint newer than the
+    last one seen — O(changed bytes) on the wire — and returns
+    (step, params, opt_state) ready for ``Engine.refresh``, or None when
+    already up to date. The local store keeps the ``keep`` newest
+    checkpoints and mark-and-sweeps the rest after each pull, so a
+    long-running replica's disk stays bounded (mirrors
+    CheckpointManager._gc on the training side).
+    """
+
+    IMAGE = "ckpt"
+
+    def __init__(self, remote, local, image: str = IMAGE, keep: int = 2):
+        self.remote = remote if isinstance(remote, LayerStore) \
+            else LayerStore(str(remote))
+        self.local = local if isinstance(local, LayerStore) \
+            else LayerStore(str(local))
+        self.image = image
+        self.keep = keep
+        self.last_step: Optional[int] = None
+        self.last_pull: Optional[PushStats] = None
+
+    def poll(self) -> Optional[Tuple[int, Any, Any]]:
+        # lazy import: ckpt depends on core only, but keep serve->ckpt
+        # out of module import time. The shared helpers guarantee the
+        # replica and the trainer agree on tag format + retention.
+        from ..ckpt.manager import latest_step, prune_steps, unflatten_tree
+        # fresh: the trainer commits tags from another process/instance,
+        # so the remote store's commit-point cache can't see them
+        step = latest_step(self.remote, self.image, fresh=True)
+        if step is None or step == self.last_step:
+            return None
+        tag = f"step-{step:08d}"
+        self.last_pull = pull_delta(self.remote, self.local, self.image, tag)
+        self.last_step = step
+        # retention: drop superseded local checkpoints + sweep their blobs
+        prune_steps(self.local, self.image, self.keep)
+        flat = self.local.load_image_payload(self.image, tag)
+        opt_flat = {k[len("opt/"):]: v for k, v in flat.items()
+                    if k.startswith("opt/")}
+        opt_flat.pop("__step__", None)
+        params_flat = {k[len("params/"):]: v for k, v in flat.items()
+                       if k.startswith("params/")}
+        return step, unflatten_tree(params_flat), unflatten_tree(opt_flat)

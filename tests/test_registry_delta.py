@@ -1,0 +1,503 @@
+"""Delta replication (§III.C redeployment): push_delta/pull_delta must be
+bit-identical to the seed full push at the remote, keep the paper's
+in-place-mutation rejection, stay crash-atomic, and verify incrementally
+(only new layers deeply). Plus the DeltaBundle wire-format round trip and
+the checkpoint replicate/follower integration."""
+import numpy as np
+import pytest
+
+from repro.core import (DeltaBundle, DeltaFormatError, ImageConfig,
+                        Instruction, LayerDescriptor, LayerStore, Manifest,
+                        PushRejected, TensorRecord, chain_checksum,
+                        content_checksum, decode_delta, diff_layer_host,
+                        encode_delta, export_delta, import_delta,
+                        inject_payload_update, new_uuid, pull_delta, push,
+                        push_delta, sha256_hex)
+
+
+def mk(tmp_path, name="store"):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "src", "content"),
+    Instruction("RUN", "build", "content", derives_from=["src"]),
+    Instruction("RUN", "deps", "content"),            # independent of src
+    Instruction("CMD", "run", "config"),
+]
+
+
+def make_payloads(rng):
+    src = {"a.py": rng.standard_normal(1000).astype(np.float32),
+           "b.py": rng.standard_normal(500).astype(np.float32)}
+    build = {"bin": (src["a.py"] * 2 + 1)}
+    deps = {"lib": rng.standard_normal(4000).astype(np.float32)}
+    return src, build, deps
+
+
+def build_v1(store, rng):
+    src, build, deps = make_payloads(rng)
+    prov = {"src": lambda: src, "build": lambda: build,
+            "deps": lambda: deps}
+    store.build_image("app", "v1", INS, prov)
+    return src, build, deps
+
+
+def inject_v2(store, src, build, deps):
+    src2 = {k: v.copy() for k, v in src.items()}
+    src2["b.py"][3] = 42.0                        # 1-chunk edit, a.py same
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"build": lambda: build,
+                                     "deps": lambda: deps})
+    return src2
+
+
+def store_snapshot(store, name, tag):
+    """Everything that defines an image at a store, as comparable bytes:
+    manifest + config JSON, every layer descriptor's on-disk bytes, and
+    every referenced blob."""
+    manifest, config = store.read_image(name, tag)
+    layers = {}
+    blobs = {}
+    for lid in manifest.layer_ids:
+        with open(store._layer_path(lid), "rb") as f:
+            layers[lid] = f.read()
+        for rec in store.read_layer(lid).records:
+            for h in rec.chunks:
+                blobs[h] = store.read_blob(h)
+    return {"manifest": manifest.to_json(), "config": config.to_json(),
+            "layers": layers, "blobs": blobs}
+
+
+# ----------------------------------------------------------- equivalence
+def test_delta_push_bit_identical_to_seed_push(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    inject_v2(store, src, build, deps)
+
+    seed_remote, delta_remote = mk(tmp_path, "rs"), mk(tmp_path, "rd")
+    for tag in ("v1", "v2"):
+        push(store, seed_remote, "app", tag)
+        push_delta(store, delta_remote, "app", tag)
+        assert store_snapshot(seed_remote, "app", tag) == \
+            store_snapshot(delta_remote, "app", tag)
+        # and both match the source exactly
+        assert store_snapshot(store, "app", tag) == \
+            store_snapshot(delta_remote, "app", tag)
+    assert delta_remote.verify_image("app", "v2", deep=True) == []
+
+
+def test_delta_push_sends_only_the_delta(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")     # bootstrap: full transfer
+    inject_v2(store, src, build, deps)
+    stats = push_delta(store, remote, "app", "v2")
+    # ONE changed 512-byte chunk of b.py is the only payload on the wire
+    assert stats.blobs_sent == 1
+    assert stats.bytes_payload == 512
+    assert stats.bytes_deduped > 0
+    assert stats.bytes_sent == stats.bytes_payload + stats.bytes_meta
+    # incremental verification: ONLY the injected src layer went deep;
+    # everything else rode the re-key table or was already held
+    assert stats.layers_deep_verified == 1
+    assert stats.layers_rekey_verified >= 1
+    assert stats.blobs_hashed_remote == 1
+    # ... and an INDEPENDENT full deep verification still passes
+    assert remote.verify_image("app", "v2", deep=True) == []
+
+
+def test_pull_delta_roundtrip(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    src2 = inject_v2(store, src, build, deps)
+    local = mk(tmp_path, "local")
+    pull_delta(store, local, "app", "v2")
+    assert local.verify_image("app", "v2", deep=True) == []
+    loaded = local.load_image_payload("app", "v2")
+    assert np.array_equal(loaded["b.py"], src2["b.py"])
+
+
+# ------------------------------------------------------------- rejection
+def test_in_place_mutation_rejected_by_delta_push(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    # naive bypass: mutate the layer content under the SAME id
+    m, _ = store.read_image("app", "v1")
+    layer = store.read_layer(m.layer_ids[1])
+    from repro.core import BuildReport, apply_edits
+    src2 = {k: v.copy() for k, v in src.items()}
+    src2["b.py"][0] = 9.0
+    d = diff_layer_host(layer, src2)
+    apply_edits(store, layer, d, BuildReport())
+    store.write_layer(layer)
+    with pytest.raises(PushRejected):
+        push_delta(store, remote, "app", "v1")
+
+
+def test_corrupt_transfer_rejected(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    from repro.core import DeltaReceiver
+    receiver = DeltaReceiver(remote)
+    with pytest.raises(PushRejected):
+        receiver.receive_blob(sha256_hex(b"expected"), b"tampered")
+
+
+def test_tampered_bundle_rejected(tmp_path, rng):
+    store = mk(tmp_path)
+    build_v1(store, rng)
+    data = bytearray(export_delta(store, "app", "v1"))
+    data[-1] ^= 0xFF                       # flip a payload byte
+    with pytest.raises(DeltaFormatError):
+        decode_delta(bytes(data))
+
+
+# ----------------------------------------------------------- crash safety
+def test_crash_mid_push_leaves_previous_tag_intact(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    inject_v2(store, src, build, deps)
+
+    class Boom(RuntimeError):
+        pass
+
+    # die AFTER the changed blob landed but before any descriptor/commit:
+    # the remote is left with an orphan blob and no new manifest
+    def dying_write_layer(layer, encoded=None):
+        raise Boom()
+
+    remote.write_layer = dying_write_layer      # instance shadow
+    try:
+        with pytest.raises(Boom):
+            push_delta(store, remote, "app", "v2")
+    finally:
+        del remote.write_layer                  # restore class method
+    # previous tag untouched and fully valid; v2 never became visible
+    assert remote.list_tags("app") == ["v1"]
+    assert not remote.has_image("app", "v2")
+    assert remote.verify_image("app", "v1", deep=True) == []
+    # the retry completes cleanly on the same remote
+    stats = push_delta(store, remote, "app", "v2")
+    assert remote.verify_image("app", "v2", deep=True) == []
+    assert stats.layers_deep_verified == 1
+
+
+def test_crash_at_commit_orphans_reverified_on_retry(tmp_path, rng):
+    """A crash AFTER blobs+descriptors landed but before the manifest
+    rename leaves orphans at the remote. The retry must not trust them as
+    'held' (they were never verified by a committed push) — they are
+    re-verified, and the push converges."""
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    inject_v2(store, src, build, deps)
+
+    class Boom(RuntimeError):
+        pass
+
+    def dying_write_image(manifest, config):
+        raise Boom()
+
+    remote.write_image = dying_write_image
+    try:
+        with pytest.raises(Boom):
+            push_delta(store, remote, "app", "v2")
+    finally:
+        del remote.write_image
+    assert remote.list_tags("app") == ["v1"]     # nothing committed
+    stats = push_delta(store, remote, "app", "v2")
+    # orphan descriptors were treated as missing, re-sent and re-verified
+    assert stats.layers_sent >= 1
+    assert stats.layers_deep_verified >= 1
+    assert remote.verify_image("app", "v2", deep=True) == []
+
+
+def test_torn_orphan_blob_replaced_on_retry(tmp_path, rng):
+    """A torn blob (exists on disk, bytes don't match its address — the
+    un-fsynced leftover of a crashed batch-mode push) must be detected at
+    the blob probe, deleted and re-sent, not trusted by existence."""
+    import os
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    src2 = inject_v2(store, src, build, deps)
+    # the genuinely NEW chunk: referenced by v2, not by committed v1
+    m1, _ = store.read_image("app", "v1")
+    v1_chunks = {h for lid in m1.layer_ids
+                 for rec in store.read_layer(lid).records
+                 for h in rec.chunks}
+    _, cfg = store.read_image("app", "v2")
+    h = next(c for c in cfg.history[-1]["delta"]["chunks"]
+             if c not in v1_chunks)
+    path = remote._blob_path(h)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(b"torn leftover")
+    stats = push_delta(store, remote, "app", "v2")
+    assert stats.blobs_sent == 1                 # resent despite existing
+    assert remote.verify_image("app", "v2", deep=True) == []
+    loaded = remote.load_image_payload("app", "v2")
+    assert np.array_equal(loaded["b.py"], src2["b.py"])
+
+
+def _mutate_in_place_consistent(store, rng):
+    """A 'naive bypass' source: edit the src layer's content under the SAME
+    layer ids and re-key checksums/chains so the image is self-consistent —
+    the strongest in-place mutation a malicious pusher could craft."""
+    from repro.core import (BuildReport, ImageConfig, apply_edits,
+                            chain_checksum, new_uuid)
+    m, cfg = store.read_image("app", "v1")
+    layers = [store.read_layer(lid, use_cache=False) for lid in m.layer_ids]
+    target = layers[1]
+    payload = store.load_layer_payload(target)
+    payload["b.py"] = payload["b.py"].copy()
+    payload["b.py"][0] = -123.0
+    d = diff_layer_host(target, payload)
+    apply_edits(store, target, d, BuildReport())
+    parent = None
+    checksums, chains = {}, {}
+    for layer in layers:
+        layer.chain = chain_checksum(parent, layer.checksum,
+                                     layer.instruction.text)
+        store.write_layer(layer)
+        checksums[layer.layer_id] = layer.checksum
+        chains[layer.layer_id] = layer.chain
+        parent = layer.chain
+    new_cfg = ImageConfig(config_id=new_uuid(), arch=cfg.arch,
+                          version=cfg.version + 1,
+                          layer_checksums=checksums, layer_chains=chains,
+                          history=cfg.history)
+    m.config_id = new_cfg.config_id
+    store.write_image(m, new_cfg)
+
+
+def test_import_delta_rejects_in_place_mutation(tmp_path, rng):
+    """The offline path must enforce the same immutability gate as the
+    live push: a committed layer id arriving with a diverged checksum is
+    rejected, even inside a fully self-consistent bundle."""
+    store = mk(tmp_path)
+    build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    before = store_snapshot(remote, "app", "v1")
+    _mutate_in_place_consistent(store, rng)
+    data = export_delta(store, "app", "v1")
+    with pytest.raises(PushRejected):
+        import_delta(remote, data)
+    # the remote's committed image is untouched, bit for bit
+    assert store_snapshot(remote, "app", "v1") == before
+
+
+def test_mutation_gate_survives_deep_tag_history(tmp_path, rng):
+    """A layer referenced only by a tag OLDER than the negotiate scan
+    window must still be protected: the committed-layer set covers every
+    tag, only the re-key index is windowed."""
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    cur, tag = src, "v1"
+    for i in range(10):               # 10 newer tags ('w..' sort after v1)
+        cur = {k: v.copy() for k, v in cur.items()}
+        cur["b.py"][1] = float(i + 5)
+        new_tag = f"w{i:02d}"
+        inject_payload_update(store, "app", tag, new_tag, {"src": cur},
+                              providers={"build": lambda: build,
+                                         "deps": lambda: deps})
+        push_delta(store, remote, "app", new_tag)
+        tag = new_tag
+    # v1's src layer id is now referenced ONLY by the oldest remote tag,
+    # outside DeltaReceiver.TAG_WINDOW. An in-place mutation of it must
+    # still be rejected — and its descriptor never overwritten.
+    from repro.core import DeltaReceiver
+    assert len(remote.list_tags("app")) > DeltaReceiver.TAG_WINDOW
+    before = store_snapshot(remote, "app", "v1")
+    _mutate_in_place_consistent(store, rng)
+    with pytest.raises(PushRejected):
+        push_delta(store, remote, "app", "v1")
+    assert store_snapshot(remote, "app", "v1") == before
+
+
+# -------------------------------------------------- offline bundle format
+def test_export_import_delta_offline(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    src2 = inject_v2(store, src, build, deps)
+    remote = mk(tmp_path, "remote")
+    push_delta(store, remote, "app", "v1")
+    data = export_delta(store, "app", "v2", base_tag="v1")
+    stats = import_delta(remote, data)
+    assert stats.blobs_sent >= 1
+    assert remote.verify_image("app", "v2", deep=True) == []
+    loaded = remote.load_image_payload("app", "v2")
+    assert np.array_equal(loaded["b.py"], src2["b.py"])
+    # the offline delta must be FAR smaller than the full image
+    full = export_delta(store, "app", "v2")
+    assert len(data) < len(full) / 2
+
+
+def test_injection_history_records_delta(tmp_path, rng):
+    store = mk(tmp_path)
+    src, build, deps = build_v1(store, rng)
+    inject_v2(store, src, build, deps)
+    _, config = store.read_image("app", "v2")
+    delta = config.history[-1]["delta"]
+    assert delta["base"] == ["app", "v1"]
+    assert len(delta["injected"]) == 1     # src layer
+    assert len(delta["rekeyed"]) >= 1      # deps / CMD downstream
+    assert delta["n_chunks"] >= 1
+    assert 1 <= len(delta["chunks"]) <= delta["n_chunks"]
+    for h in delta["chunks"]:
+        assert store.has_blob(h)
+
+
+# -------------------------------------------- hypothesis: wire round trip
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _name = st.text(st.characters(min_codepoint=48, max_codepoint=122),
+                    min_size=1, max_size=12)
+
+    @st.composite
+    def bundles(draw):
+        n_blobs = draw(st.integers(0, 5))
+        blobs = {}
+        for _ in range(n_blobs):
+            payload = draw(st.binary(min_size=0, max_size=300))
+            blobs[sha256_hex(payload)] = payload
+        n_layers = draw(st.integers(0, 3))
+        layers = []
+        parent = None
+        for i in range(n_layers):
+            recs = []
+            for j in range(draw(st.integers(0, 2))):
+                chunk_ids = draw(st.lists(
+                    st.sampled_from(sorted(blobs) or [sha256_hex(b"x")]),
+                    min_size=1, max_size=3)) if blobs else []
+                recs.append(TensorRecord(
+                    name=f"t{j}", shape=(4,), dtype="float32",
+                    chunk_bytes=512, chunks=tuple(chunk_ids)))
+            ins = Instruction("COPY", draw(_name), "content")
+            checksum = content_checksum(recs)
+            layer = LayerDescriptor(
+                layer_id=new_uuid(), version=draw(st.integers(1, 9)),
+                instruction=ins, checksum=checksum,
+                chain=chain_checksum(parent, checksum, ins.text),
+                records=recs, empty=not recs)
+            parent = layer.chain
+            layers.append(layer)
+        manifest = Manifest(name=draw(_name), tag=draw(_name),
+                            layer_ids=[la.layer_id for la in layers],
+                            config_id=new_uuid())
+        config = ImageConfig(
+            config_id=manifest.config_id, arch="generic",
+            version=draw(st.integers(1, 5)),
+            layer_checksums={la.layer_id: la.checksum for la in layers},
+            layer_chains={la.layer_id: la.chain for la in layers},
+            history=[{"instruction": "INJECT", "edits": 1}])
+        rekey = {la.layer_id: new_uuid()
+                 for la in layers if draw(st.booleans())}
+        return DeltaBundle(name=manifest.name, tag=manifest.tag,
+                           base_tag=draw(_name), manifest=manifest,
+                           config=config, layers=layers, rekey=rekey,
+                           blobs=blobs)
+
+    @settings(max_examples=30, deadline=None)
+    @given(bundles())
+    def test_delta_bundle_roundtrip(bundle):
+        back = decode_delta(encode_delta(bundle))
+        assert back.name == bundle.name
+        assert back.tag == bundle.tag
+        assert back.base_tag == bundle.base_tag
+        assert back.manifest.to_json() == bundle.manifest.to_json()
+        assert back.config.to_json() == bundle.config.to_json()
+        assert [la.to_json() for la in back.layers] == \
+            [la.to_json() for la in bundle.layers]
+        assert back.rekey == bundle.rekey
+        assert back.blobs == bundle.blobs
+        # deterministic: encode(decode(encode(x))) == encode(x)
+        assert encode_delta(back) == encode_delta(bundle)
+
+
+# -------------------------------------------------- ckpt replicate + serve
+def test_checkpoint_replicate_ships_delta(tmp_path):
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    params = {"w": np.arange(4096, dtype=np.float32).reshape(64, 64)}
+    opt = {"m": np.zeros((64, 64), np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    remote = LayerStore(str(tmp_path / "serve"), chunk_bytes=512)
+    s0 = mgr.replicate(remote)
+    assert remote.verify_image("ckpt", mgr.tag_of(0), deep=True) == []
+
+    params2 = {"w": params["w"].copy()}
+    params2["w"][0, 0] += 1.0                       # one-chunk change
+    mgr.save(1, params2, opt)
+    s1 = mgr.replicate(remote)
+    # the second replication is O(changed bytes), not O(checkpoint)
+    assert s1.bytes_payload < s0.bytes_payload / 4
+    assert remote.verify_image("ckpt", mgr.tag_of(1), deep=True) == []
+
+
+def test_checkpoint_follower_pulls_delta(tmp_path):
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    params = {"w": np.arange(4096, dtype=np.float32).reshape(64, 64)}
+    opt = {"m": np.zeros((64, 64), np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"))
+    got = fol.poll()
+    assert got is not None
+    step, p, o = got
+    assert step == 0
+    assert np.array_equal(np.asarray(p["w"]), params["w"])
+    assert fol.poll() is None                       # already up to date
+
+    params2 = {"w": params["w"].copy()}
+    params2["w"][0, 0] += 1.0                       # one-chunk change
+    mgr.save(3, params2, opt)
+    step, p, _ = fol.poll()
+    assert step == 3
+    assert np.array_equal(np.asarray(p["w"]), np.asarray(params2["w"]))
+    # the pull was a delta: payload well under the full checkpoint size
+    assert fol.last_pull.bytes_payload < params["w"].nbytes / 4
+    assert fol.local.verify_image("ckpt", f"step-{3:08d}", deep=True) == []
+
+
+def test_push_stats_account_meta_and_wall(tmp_path, rng):
+    """Satellite: seed push's bytes_sent must now include descriptor +
+    manifest/config bytes, and report dedup savings + wall time."""
+    store = mk(tmp_path)
+    build_v1(store, rng)
+    remote = mk(tmp_path, "remote")
+    stats = push(store, remote, "app", "v1")
+    manifest, config = store.read_image("app", "v1")
+    from repro.core.manifest import dumps
+    meta_floor = len(dumps(manifest.to_json()).encode()) + \
+        len(dumps(config.to_json()).encode())
+    assert stats.bytes_meta > meta_floor          # descriptors counted too
+    assert stats.bytes_sent == stats.bytes_payload + stats.bytes_meta
+    assert stats.wall_s > 0
+    # second push of the identical tag: all payload deduped
+    stats2 = push(store, remote, "app", "v1")
+    assert stats2.bytes_payload == 0
+    assert stats2.bytes_deduped > 0
