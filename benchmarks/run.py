@@ -532,6 +532,185 @@ def bench_push_delta(trials: int) -> dict:
     return out
 
 
+def bench_fanout(trials: int) -> dict:
+    """Fan-out replication + sparse serving refresh (the fleet topology):
+    one training source feeding N serving replicas with k=8 changed layers
+    of the 512-leaf image (8 content layers x 64 leaves) per save. Gated
+    claims per N in {2, 4}: ONE negotiation round; the source reads each
+    changed blob from its store exactly once regardless of N —
+    counter-proved against an instrumented store, and exactly N x fewer
+    reads than N sequential ``push_delta`` calls; per-replica wire stays
+    within the 1.25x changed-bytes budget; and at the consumer,
+    ``Engine.refresh`` device-puts ONLY the changed leaves after a sparse
+    ``changed_tensor_paths`` plan, bit-identical to a full reload.
+    """
+    from repro.ckpt.manager import flatten_tree, unflatten_tree
+    from repro.configs import get_smoke_config
+    from repro.core import (Instruction, LayerStore, diff_image,
+                            inject_image_multi, push_delta,
+                            replicate_fanout)
+    from repro.serve import Engine, changed_tensor_paths
+    from .scenarios import _edit_chunks, _gen
+
+    n_layers, leaves_per_layer, edits_per_layer = 8, 64, 2
+    leaf_bytes = chunk_bytes = 128 << 10
+    ins = [Instruction("FROM", "base", "config")]
+    payloads = {}
+    for i in range(n_layers):
+        key = f"layer{i}"
+        ins.append(Instruction("COPY", key, "content"))
+        payloads[key] = {
+            f"L{i}/l{j:03d}": _gen(2000 + i * leaves_per_layer + j,
+                                   leaf_bytes)
+            for j in range(leaves_per_layer)}
+    ins.append(Instruction("CMD", "serve", "config"))
+    keys = list(payloads)                     # ALL k=8 content layers move
+
+    out = {"n_layers": n_layers, "leaves": n_layers * leaves_per_layer,
+           "leaf_bytes": leaf_bytes, "chunk_bytes": chunk_bytes,
+           "trials": trials}
+    root = tempfile.mkdtemp(prefix="lc_fan_")
+    try:
+        for N in (2, 4):
+            src = LayerStore(os.path.join(root, f"src{N}"),
+                             chunk_bytes=chunk_bytes,
+                             record_fingerprints=False)
+            current = {key: dict(tree) for key, tree in payloads.items()}
+            prov = {key: (lambda v=v: v) for key, v in current.items()}
+            src.build_image("app", "v1", ins, prov)
+            fan_reps = [LayerStore(os.path.join(root, f"f{N}_{i}"),
+                                   chunk_bytes=chunk_bytes,
+                                   record_fingerprints=False)
+                        for i in range(N)]
+            seq_reps = [LayerStore(os.path.join(root, f"q{N}_{i}"),
+                                   chunk_bytes=chunk_bytes,
+                                   record_fingerprints=False)
+                        for i in range(N)]
+            replicate_fanout(src, fan_reps, "app", "v1")
+            for r in seq_reps:
+                push_delta(src, r, "app", "v1")
+
+            fan_t, seq_t, amp, ratio = [], [], [], []
+            rounds_ok = reads_ok = True
+            changed_blobs = changed_bytes = 0
+            tag = "v1"
+            for tr in range(trials):
+                for key in keys:
+                    current[key] = dict(current[key])
+                    for e in range(edits_per_layer):
+                        leaf = [k for k in current[key]][
+                            (tr * edits_per_layer + e) % leaves_per_layer]
+                        current[key][leaf] = _edit_chunks(
+                            current[key][leaf], 1, chunk_bytes, seed=tr + 1)
+                m, _ = src.read_image("app", tag)
+                layers = [src.read_layer(lid) for lid in m.layer_ids]
+                diffs = diff_image(layers,
+                                   {key: current[key] for key in keys})
+                new_tag = f"t{tr + 1}"
+                inject_image_multi(src, "app", tag, new_tag, diffs)
+                changed = {e.new_hash for d in diffs.values()
+                           for e in d.edits}
+                changed_blobs = len(changed)
+                changed_bytes = sum(len(e.data) for d in diffs.values()
+                                    for e in d.edits)
+                prev_tag, tag = tag, new_tag
+
+                # instrumented source: count ACTUAL blob reads during the
+                # fan-out (the exactly-once claim is counter-proved, not
+                # taken from FanoutStats). The wrapper runs on hash-pool
+                # threads — list.append is the GIL-atomic counter.
+                reads = []
+                orig_read = src.read_blob
+                src.read_blob = lambda h: (reads.append(h), orig_read(h))[1]
+                t0 = time.perf_counter()
+                fan = replicate_fanout(src, fan_reps, "app", tag)
+                fan_t.append(time.perf_counter() - t0)
+                del src.read_blob
+                assert fan.ok, [r.error for r in fan.replicas]
+                rounds_ok &= fan.negotiation_rounds == 1
+                reads_ok &= (fan.source_blob_reads == changed_blobs ==
+                             len(reads))
+                amp.append(max(r.stats.bytes_sent for r in fan.replicas)
+                           / max(changed_bytes, 1))
+
+                reads = []
+                src.read_blob = lambda h: (reads.append(h), orig_read(h))[1]
+                t0 = time.perf_counter()
+                for r in seq_reps:
+                    push_delta(src, r, "app", tag)
+                seq_t.append(time.perf_counter() - t0)
+                del src.read_blob
+                ratio.append(len(reads) / max(changed_blobs, 1))
+
+            # consumer side: sparse refresh at one replica vs full reload.
+            # Engine setup and the previous-revision tree are built OUTSIDE
+            # the timed windows — each window times exactly one refresh
+            # path: store assembly + unflatten + Engine.refresh.
+            rep = fan_reps[0]
+            changed_paths = changed_tensor_paths(rep, "app", prev_tag, tag)
+            prev_tree = unflatten_tree(rep.load_image_payload("app",
+                                                              prev_tag))
+            eng = Engine(get_smoke_config("yi-6b"), prev_tree)
+            t0 = time.perf_counter()
+            full_flat = rep.load_image_payload("app", tag)
+            eng.refresh(unflatten_tree(full_flat))
+            full_s = time.perf_counter() - t0
+            want = {k: v.copy() for k, v in full_flat.items()}
+            eng.refresh(prev_tree)                          # rewind
+            t0 = time.perf_counter()
+            sparse_flat = rep.load_image_payload("app", tag,
+                                                 names=changed_paths)
+            n_put = eng.refresh(unflatten_tree(sparse_flat), changed_paths)
+            partial_s = time.perf_counter() - t0
+
+            live = flatten_tree(eng.params)
+            identical = set(live) == set(want) and all(
+                np.array_equal(np.asarray(live[p]), want[p]) for p in want)
+
+            # worst replica of the worst trial — the budget is a per-push
+            # guarantee, so the gate must see the maximum, not the median
+            amp_max = float(np.max(np.asarray(amp)))
+            f, s = np.asarray(fan_t), np.asarray(seq_t)
+            out[f"N{N}"] = {
+                "n_replicas": N,
+                "changed_bytes": changed_bytes,
+                "changed_blobs": changed_blobs,
+                "negotiation_rounds": 1 if rounds_ok else -1,
+                "source_reads_equal_changed": bool(reads_ok),
+                "source_read_ratio_vs_sequential":
+                    float(np.median(np.asarray(ratio))),
+                "wire_amplification_max": amp_max,
+                "within_budget": bool(amp_max <= 1.25),
+                "fanout": {"median_s": float(np.median(f)),
+                           "mean_s": float(f.mean())},
+                "sequential": {"median_s": float(np.median(s)),
+                               "mean_s": float(s.mean())},
+                "speedup_wall": float(np.median(s) / np.median(f)),
+                "refresh": {
+                    "leaves_total": n_layers * leaves_per_layer,
+                    "leaves_changed": len(changed_paths),
+                    "refresh_leaves_partial": int(n_put),
+                    "refresh_only_changed": bool(
+                        n_put == len(changed_paths) ==
+                        len(sparse_flat) < n_layers * leaves_per_layer),
+                    "refresh_bit_identical": bool(identical),
+                    "partial_s": partial_s,
+                    "full_s": full_s,
+                },
+            }
+            print(f"fanout_N{N},{np.median(f) * 1e6:.1f},"
+                  f"rounds=1 reads={changed_blobs} amp={amp_max:.3f}")
+            print(f"fanout_N{N}_sequential,{np.median(s) * 1e6:.1f},"
+                  f"speedup={out[f'N{N}']['speedup_wall']:.2f}x "
+                  f"read_ratio={out[f'N{N}']['source_read_ratio_vs_sequential']:.1f}")
+            print(f"fanout_N{N}_refresh,{partial_s * 1e6:.1f},"
+                  f"leaves={n_put}/{n_layers * leaves_per_layer} "
+                  f"identical={identical}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
 def bench_fingerprint(trials: int) -> dict:
     """Change-detector throughput: host SHA-256 vs on-device fingerprint
     (jnp path; the Pallas kernel is the TPU-target implementation)."""
@@ -581,6 +760,7 @@ BASELINES = {
     "incremental_save": "BENCH_incremental_save.json",
     "multilayer_inject": "BENCH_multilayer_inject.json",
     "push_delta": "BENCH_push_delta.json",
+    "fanout": "BENCH_fanout.json",
 }
 
 
@@ -605,6 +785,7 @@ def main() -> None:
         "incremental_save": lambda: bench_incremental_save(trials),
         "multilayer_inject": lambda: bench_multilayer_inject(trials),
         "push_delta": lambda: bench_push_delta(max(trials // 3, 5)),
+        "fanout": lambda: bench_fanout(max(trials // 3, 5)),
         "fingerprint": lambda: bench_fingerprint(trials),
         "roofline": bench_roofline,
     }

@@ -51,9 +51,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import (BuildReport, Instruction, LayerStore, PushStats,
-                    diff_image, fingerprint_tree, fingerprint_tree_packed,
-                    inject_image_multi, push_delta)
+from ..core import (BuildReport, Instruction, LayerStore, diff_image,
+                    fingerprint_tree, fingerprint_tree_packed,
+                    inject_image_multi, push_delta, replicate_fanout)
 
 
 def flatten_tree(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -133,9 +133,10 @@ class CheckpointPolicy:
                                       # (False = per-leaf dispatch baseline)
     async_write: bool = True
     chunk_bytes: int = 1 << 20
-    durability: str = "full"          # "batch" defers per-chunk fsyncs to
-                                      # one concurrent flush at the
-                                      # manifest commit point
+    durability: str = "batch"         # the store-wide default: per-chunk
+                                      # fsyncs defer to one concurrent
+                                      # flush at the manifest commit point
+                                      # ("full" = seed per-write fsyncs)
 
 
 class CheckpointManager:
@@ -293,21 +294,31 @@ class CheckpointManager:
         prune_steps(self.store, self.IMAGE, self.policy.keep)
 
     # --------------------------------------------------------- replication
-    def replicate(self, remote, step: Optional[int] = None
-                  ) -> Optional[PushStats]:
-        """Ship a checkpoint to a serving/registry store as a DELTA: one
-        have-set negotiation + only the chunks the remote is missing cross
-        the wire (core.registry.push_delta). After an incremental save this
-        is O(changed bytes) — call it at the save cadence to keep a serving
-        replica hot. ``remote`` is a LayerStore or a filesystem path."""
+    def replicate(self, remote, step: Optional[int] = None):
+        """Ship a checkpoint to serving/registry stores as a DELTA: one
+        have-set negotiation + only the chunks a remote is missing cross
+        the wire. After an incremental save this is O(changed bytes) —
+        call it at the save cadence to keep serving replicas hot.
+
+        ``remote`` is a LayerStore or filesystem path (-> ``push_delta``,
+        returns PushStats, failures raise), or a list/tuple of them (->
+        ``replicate_fanout``, returns FanoutStats: ONE negotiation round +
+        one source read pass for the whole fleet, per-replica failures
+        isolated so one sick replica never blocks the rest)."""
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
             return None
-        if not isinstance(remote, LayerStore):
-            remote = LayerStore(str(remote),
-                                chunk_bytes=self.policy.chunk_bytes)
-        return push_delta(self.store, remote, self.IMAGE, self.tag_of(step))
+
+        def as_store(r):
+            return r if isinstance(r, LayerStore) else \
+                LayerStore(str(r), chunk_bytes=self.policy.chunk_bytes)
+
+        if isinstance(remote, (list, tuple)):
+            return replicate_fanout(self.store, [as_store(r) for r in remote],
+                                    self.IMAGE, self.tag_of(step))
+        return push_delta(self.store, as_store(remote), self.IMAGE,
+                          self.tag_of(step))
 
     # ------------------------------------------------------------ restore
     def restore(self, step: Optional[int] = None

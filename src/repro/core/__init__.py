@@ -10,7 +10,7 @@ from .delta import (DeltaBundle, DeltaFormatError, decode_delta,
                     encode_delta)
 from .diff import (ChunkEdit, LayerDiff, diff_image, diff_manifests,
                    diff_layer_fingerprint, diff_layer_host,
-                   locate_changed_layers)
+                   diff_tensor_records, locate_changed_layers)
 from .fingerprint import (chunk_geometry, fingerprint_chunk_bytes_ref,
                           fingerprint_chunks, fingerprint_chunks_ref,
                           fingerprint_tree, fingerprint_tree_packed,
@@ -21,9 +21,9 @@ from .inject import (StructureChangeError, apply_edits, clone_layer,
 from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
                        chain_checksum, content_checksum,
                        injection_history_entry, new_uuid)
-from .registry import (DeltaReceiver, HaveSet, PushRejected, PushStats,
-                       export_delta, import_delta, pull, pull_delta, push,
-                       push_delta)
+from .registry import (DeltaReceiver, FanoutStats, HaveSet, PushRejected,
+                       PushStats, ReplicaResult, export_delta, import_delta,
+                       pull, pull_delta, push, push_delta, replicate_fanout)
 from .store import BuildReport, LayerStore
 
 __all__ = [
@@ -32,7 +32,8 @@ __all__ = [
     "tensor_chunk_bytes", "tensor_to_bytes", "DeltaBundle",
     "DeltaFormatError", "decode_delta", "diff_manifests", "encode_delta",
     "ChunkEdit", "LayerDiff", "diff_image",
-    "diff_layer_fingerprint", "diff_layer_host", "locate_changed_layers",
+    "diff_layer_fingerprint", "diff_layer_host", "diff_tensor_records",
+    "locate_changed_layers",
     "chunk_geometry", "fingerprint_chunk_bytes_ref", "fingerprint_chunks",
     "fingerprint_chunks_ref", "fingerprint_tree", "fingerprint_tree_packed",
     "fingerprint_tree_ref", "tree_pack_index",
@@ -40,7 +41,8 @@ __all__ = [
     "inject_image_multi", "inject_payload_update", "ImageConfig",
     "Instruction", "LayerDescriptor", "Manifest", "chain_checksum",
     "content_checksum", "injection_history_entry", "new_uuid",
-    "DeltaReceiver", "HaveSet", "PushRejected", "PushStats", "export_delta",
-    "import_delta", "pull", "pull_delta", "push", "push_delta",
+    "DeltaReceiver", "FanoutStats", "HaveSet", "PushRejected", "PushStats",
+    "ReplicaResult", "export_delta", "import_delta", "pull", "pull_delta",
+    "push", "push_delta", "replicate_fanout",
     "BuildReport", "LayerStore",
 ]

@@ -20,8 +20,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .chunker import (hash_chunks, iter_chunks, tensor_chunk_bytes,
-                      tensor_to_bytes)
+from .chunker import (TensorRecord, hash_chunks, iter_chunks,
+                      tensor_chunk_bytes, tensor_to_bytes)
 from .fingerprint import fingerprint_chunk_bytes_ref
 from .manifest import LayerDescriptor
 
@@ -195,6 +195,44 @@ def diff_manifests(base_layers: Sequence[LayerDescriptor],
         for rec in layer.records:
             chunks.update(h for h in rec.chunks if h not in base_chunks)
     return missing, rekey, chunks
+
+
+def diff_tensor_records(old_layers: Sequence[LayerDescriptor],
+                        new_layers: Sequence[LayerDescriptor],
+                        ) -> Optional[set]:
+    """Tensor-level sparse-update plan between two stored revisions of one
+    image: the set of tensor names whose stored records differ (any chunk
+    hash moved). Pure metadata — no blob is read — which is what lets a
+    serving replica refresh O(changed tensors) instead of O(model) after a
+    delta pull. Returns ``None`` when the change is structural (tensor
+    added/removed, shape or dtype change): value-only injection can't have
+    produced it, so callers must fall back to a full reload. Assumes tensor
+    names are unique across the image's content layers (true for every
+    checkpoint image; images violating it also get the full-reload answer
+    via the ambiguity check below)."""
+    def index(layers):
+        recs: Dict[str, TensorRecord] = {}
+        for layer in layers:
+            if layer.empty:
+                continue
+            for r in layer.records:
+                if r.name in recs:          # ambiguous name: no sparse plan
+                    return None
+                recs[r.name] = r
+        return recs
+
+    old, new = index(old_layers), index(new_layers)
+    if old is None or new is None or set(old) != set(new):
+        return None
+    changed = set()
+    for name, rec in new.items():
+        prev = old[name]
+        if prev.shape != rec.shape or prev.dtype != rec.dtype or \
+                prev.chunk_bytes != rec.chunk_bytes:
+            return None
+        if prev.chunks != rec.chunks:
+            changed.add(name)
+    return changed
 
 
 def diff_image(layers: Sequence[LayerDescriptor],

@@ -322,7 +322,8 @@ def inject_image(store: LayerStore,
                      [], Dict[str, np.ndarray]]]] = None,
                  ) -> Tuple[Manifest, ImageConfig, BuildReport]:
     """Seed-compatible single-transaction API: the same pipeline under the
-    store's own durability mode (per-write fsync accounting preserved)."""
+    store's own durability mode (batch by default store-wide; a store
+    opened with durability="full" keeps its per-write fsync accounting)."""
     return inject_image_multi(store, name, tag, new_tag, diffs, providers,
                               durability=None)
 

@@ -29,17 +29,27 @@ and re-keyed manifest is ACCEPTED):
   earlier push. ``PushStats.layers_deep_verified`` proves the "deep-verify
   only new layers" claim; CI gates it.
 
+* ``replicate_fanout`` — the fleet form of ``push_delta``: one training
+  source feeding N serving replicas. The have-set is negotiated in ONE
+  round (every replica answers the same O(#layers) request; the answers
+  are unioned into a single plan), each changed blob is read from the
+  source store exactly once and broadcast to every replica missing it,
+  and failures are isolated per replica (``ReplicaResult``) so a sick or
+  slow destination never blocks the healthy ones — a clean retry
+  converges it. ``push_delta`` itself is the N=1 special case.
+
 ``export_delta``/``import_delta`` are the offline (``docker save``-style)
 form of the same protocol: a self-checking ``DeltaBundle`` byte string
 computed against a base tag instead of a live have-set.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .chunker import hash_pool, sha256_hex
 from .delta import DeltaBundle, decode_delta, encode_delta
@@ -185,6 +195,7 @@ class DeltaReceiver:
 
     def __init__(self, store: LayerStore):
         self.store = store
+        self.negotiations = 0        # negotiate() exchanges this push
         self._verified_blobs: Set[str] = set()
         self._received_layers: Dict[str, LayerDescriptor] = {}
         # chunk ids referenced by COMMITTED layers of this image (built by
@@ -248,6 +259,7 @@ class DeltaReceiver:
         re-received and re-verified rather than trusted.
         """
         have = HaveSet()
+        self.negotiations += 1
         by_family = self._scan_committed(name)
 
         for lid, (family, checksum) in layer_meta.items():
@@ -302,11 +314,14 @@ class DeltaReceiver:
         return missing
 
     # ------------------------------------------------------------- receive
-    def receive_layer(self, layer: LayerDescriptor) -> int:
+    def receive_layer(self, layer: LayerDescriptor,
+                      encoded: Optional[bytes] = None) -> int:
         """A committed descriptor is IMMUTABLE at this store: receiving the
         same id with a diverged checksum is the in-place mutation the gate
         exists for (this is what keeps the offline ``import_delta`` path as
-        safe as the negotiated one); an identical re-send is a no-op."""
+        safe as the negotiated one); an identical re-send is a no-op.
+        ``encoded`` lets a fan-out source serialize each descriptor once
+        for every replica (must be ``dumps(layer.to_json())``)."""
         if self._committed_layers is not None and \
                 layer.layer_id in self._committed_layers and \
                 self.store.has_layer(layer.layer_id):
@@ -317,7 +332,8 @@ class DeltaReceiver:
                     "different checksum trace (in-place mutation without a "
                     "new id?)")
             return 0
-        data = dumps(layer.to_json()).encode()
+        data = encoded if encoded is not None \
+            else dumps(layer.to_json()).encode()
         self._received_layers[layer.layer_id] = layer
         self.store.write_layer(layer, encoded=data)
         self.stats.layers_sent += 1
@@ -442,74 +458,246 @@ class DeltaReceiver:
 _TRANSFER_BATCH = 32    # blobs in flight per pipeline wave
 
 
-def _pipelined_transfer(src: LayerStore, receiver: DeltaReceiver,
-                        hashes: Iterable[str]) -> None:
-    """Concurrent blob read -> send -> verify -> write on the shared hash
-    pool: while one worker's SHA verification runs (GIL released), others
-    read from the source store and write into the receiver. Bounded
-    in-flight batches keep peak memory at O(batch), not O(delta)."""
-    pool = hash_pool()
+@dataclass
+class ReplicaResult:
+    """One destination's outcome in a fan-out: its PushStats on success,
+    the captured failure otherwise. Failures are ISOLATED — a replica that
+    rejects, corrupts a transfer or dies never blocks the others; a later
+    ``replicate_fanout`` retry converges it (orphan blobs/descriptors are
+    re-verified by the normal negotiate/probe crash-recovery path)."""
 
-    def ship(h: str) -> None:
-        receiver.receive_blob(h, src.read_blob(h))
+    stats: Optional[PushStats] = None
+    error: Optional[str] = None
+    exception: Optional[BaseException] = None
 
-    hashes = list(hashes)
-    if len(hashes) <= 1 or pool is None:
-        for h in hashes:
-            ship(h)
-        return
-    for off in range(0, len(hashes), _TRANSFER_BATCH):
-        futures: List[Future] = [pool.submit(ship, h)
-                                 for h in hashes[off:off + _TRANSFER_BATCH]]
-        for f in futures:
-            f.result()
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
-def push_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,
-               ) -> PushStats:
-    """O(changed-bytes) push (module docstring): negotiate the have-set in
-    one exchange, stream only missing layers + blobs over the pipelined
-    transfer, then commit with incremental remote verification."""
+@dataclass
+class FanoutStats:
+    """What one fan-out replication actually cost the SOURCE, plus the
+    per-replica outcomes. ``negotiation_rounds`` and ``source_blob_reads``
+    are the paper-style structural claims CI gates: the source walks its
+    layer metadata once and reads each changed blob from its store exactly
+    once, no matter how many replicas are behind."""
+
+    replicas: List[ReplicaResult] = field(default_factory=list)
+    negotiation_rounds: int = 0
+    source_blob_reads: int = 0
+    blobs_broadcast: int = 0     # unique blobs ANY replica was missing
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.replicas)
+
+    @property
+    def n_ok(self) -> int:
+        return sum(1 for r in self.replicas if r.ok)
+
+
+def replicate_fanout(src: LayerStore, remotes: Sequence,
+                     name: str, tag: str) -> FanoutStats:
+    """Fan-out delta replication: push ``name:tag`` to N replicas with ONE
+    negotiated have-set and ONE source read pass.
+
+    * One negotiation round: every replica answers the same O(#layers)
+      metadata request (``DeltaReceiver.negotiate`` + ``probe_blobs``);
+      the answers are unioned into a single plan mapping each missing blob
+      to the replicas that need it — replicas missing different subsets
+      get per-replica send lists carved from that one plan.
+    * One source read pass: each blob any replica is missing is read from
+      the source store exactly once (``FanoutStats.source_blob_reads``)
+      and broadcast through the pipelined read -> send -> verify -> write
+      path, bounded in-flight batches keeping peak memory at O(batch);
+      layer descriptors are serialized once for all replicas.
+    * Per-replica isolation: negotiation, transfer and commit failures are
+      captured per replica (``ReplicaResult``); healthy replicas commit
+      regardless, commits run concurrently so one straggler doesn't hold
+      the rest, and a clean retry converges the failed ones.
+    """
     t0 = time.perf_counter()
-    problems = src.verify_image(name, tag, deep=False)
+    problems = src.verify_image(name, tag, deep=False)   # once, not per N
     if problems:
         raise PushRejected(f"source image fails verification: {problems}")
     manifest, config = src.read_image(name, tag)
     layers = {lid: src.read_layer(lid) for lid in manifest.layer_ids}
+    layer_meta = {lid: (layer.family, layer.checksum)
+                  for lid, layer in layers.items()}
+    total_refs = sum(len(rec.chunks) for layer in layers.values()
+                     for rec in layer.records)
+    total_payload = sum(layer.nbytes for layer in layers.values())
 
-    receiver = DeltaReceiver(dst)
-    with _BatchScope(dst):
-        have = receiver.negotiate(name, {
-            lid: (layer.family, layer.checksum)
-            for lid, layer in layers.items()})
-        receiver.stats.bytes_meta += have.exchange_bytes
+    stores = [r if isinstance(r, LayerStore) else LayerStore(str(r))
+              for r in remotes]
+    receivers = [DeltaReceiver(s) for s in stores]
+    fan = FanoutStats(replicas=[ReplicaResult() for _ in stores])
+    lock = threading.Lock()
 
-        # the in-place-mutation gate, BEFORE any byte is transferred
-        for lid, remote_checksum in have.held_checksums.items():
-            if layers[lid].checksum != remote_checksum:
-                raise PushRejected(
-                    f"layer {lid}: remote holds a different checksum trace "
-                    "for this id (in-place mutation without a new id?)")
+    def fail(i: int, exc: BaseException) -> None:
+        with lock:
+            if fan.replicas[i].error is None:
+                fan.replicas[i].error = f"{type(exc).__name__}: {exc}"
+                # kept with its traceback: push_delta re-raises it, and a
+                # transfer-failure frame pins at most ONE blob's bytes
+                fan.replicas[i].exception = exc
 
-        # blob set-difference: only chunks of genuinely-new-content layers
-        need = sorted({h for lid in have.missing_layers
-                       if lid not in have.rekey
-                       for rec in layers[lid].records for h in rec.chunks})
-        have.missing_blobs = receiver.probe_blobs(need) if need else set()
+    def alive(i: int) -> bool:
+        return fan.replicas[i].error is None
 
-        _pipelined_transfer(src, receiver, sorted(have.missing_blobs))
-        for lid in have.missing_layers:
-            receiver.receive_layer(layers[lid])
-        stats = receiver.commit(manifest, config)
-        # dedup accounting from record metadata (no per-blob stat calls):
-        # everything the image references that did NOT cross the wire.
-        total_refs = sum(len(rec.chunks) for layer in layers.values()
-                         for rec in layer.records)
-        total_payload = sum(layer.nbytes for layer in layers.values())
-        stats.blobs_dedup = total_refs - stats.blobs_sent
-        stats.bytes_deduped = total_payload - stats.bytes_payload
-    stats.wall_s = time.perf_counter() - t0
-    return stats
+    with contextlib.ExitStack() as stack:
+        for s in stores:
+            stack.enter_context(_BatchScope(s))
+
+        # ---- ONE negotiation round: same request to every replica (the
+        # independent exchanges run concurrently — each one scans its own
+        # replica's metadata), the answers unioned into one plan
+        # (blob -> replicas missing it). negotiation_rounds is MEASURED
+        # from the receivers' exchange counters, not asserted.
+        missing_layers: List[List[str]] = [[] for _ in stores]
+        plans: Dict[int, Set[str]] = {}
+        want: Dict[str, List[int]] = {}
+        pool = hash_pool()
+
+        def plan(i: int) -> None:
+            try:
+                recv = receivers[i]
+                have = recv.negotiate(name, layer_meta)
+                recv.stats.bytes_meta += have.exchange_bytes
+                # the in-place-mutation gate, BEFORE any byte moves
+                for lid, remote_checksum in have.held_checksums.items():
+                    if layers[lid].checksum != remote_checksum:
+                        raise PushRejected(
+                            f"layer {lid}: remote holds a different "
+                            "checksum trace for this id (in-place mutation "
+                            "without a new id?)")
+                # blob set-difference: only new-content layers' chunks
+                need = sorted({h for lid in have.missing_layers
+                               if lid not in have.rekey
+                               for rec in layers[lid].records
+                               for h in rec.chunks})
+                missing_layers[i] = list(have.missing_layers)
+                plans[i] = recv.probe_blobs(need) if need else set()
+            except Exception as e:
+                fail(i, e)
+
+        if len(stores) > 1 and pool is not None:
+            for f in [pool.submit(plan, i) for i in range(len(stores))]:
+                f.result()
+        else:
+            for i in range(len(stores)):
+                plan(i)
+        for i in sorted(plans):
+            if not alive(i):
+                continue
+            for h in plans[i]:
+                want.setdefault(h, []).append(i)
+        fan.negotiation_rounds = max(
+            (r.negotiations for r in receivers), default=0)
+
+        # ---- ONE source read pass, broadcast on the pipelined transfer:
+        # one pool task per blob reads it (exactly once) and verifies +
+        # writes the first replica inline — reads of other blobs overlap
+        # with SHA verification exactly as the single-destination pipeline
+        # always did — while the remaining replicas' receives fan out as
+        # their own pool tasks (SHA releases the GIL, so N replicas verify
+        # in parallel). Bounded in-flight waves keep memory at O(batch),
+        # not O(delta) — and never O(N x delta).
+        hashes = sorted(h for h, targets in want.items()
+                        if any(alive(i) for i in targets))
+        fan.blobs_broadcast = len(hashes)
+
+        def receive(i: int, h: str, data: bytes) -> None:
+            if not alive(i):
+                return
+            try:
+                receivers[i].receive_blob(h, data)
+            except Exception as e:
+                fail(i, e)
+
+        recv_futures: List[Future] = []
+
+        def ship(h: str) -> None:
+            targets = [i for i in want[h] if alive(i)]
+            if not targets:
+                return              # every taker died mid-transfer
+            data = src.read_blob(h)
+            with lock:
+                fan.source_blob_reads += 1
+            if pool is not None:
+                recv_futures.extend(pool.submit(receive, i, h, data)
+                                    for i in targets[1:])
+                receive(targets[0], h, data)
+            else:
+                for i in targets:
+                    receive(i, h, data)
+
+        for off in range(0, len(hashes), _TRANSFER_BATCH):
+            wave = hashes[off:off + _TRANSFER_BATCH]
+            if pool is None or len(wave) <= 1:
+                for h in wave:
+                    ship(h)
+            else:
+                for f in [pool.submit(ship, h) for h in wave]:
+                    f.result()
+            # all ships joined, so no more receives get scheduled: drain
+            for f in recv_futures:
+                f.result()
+            recv_futures.clear()
+
+        # ---- per-replica finalize: descriptors (encoded ONCE for all
+        # replicas), incremental verification, the manifest commit —
+        # concurrent across replicas so a straggler only delays itself.
+        encoded: Dict[str, bytes] = {}
+        for i in range(len(stores)):
+            if not alive(i):
+                continue
+            for lid in missing_layers[i]:
+                if lid not in encoded:
+                    encoded[lid] = dumps(layers[lid].to_json()).encode()
+
+        def finalize(i: int) -> None:
+            recv = receivers[i]
+            for lid in missing_layers[i]:
+                recv.receive_layer(layers[lid], encoded=encoded[lid])
+            stats = recv.commit(manifest, config)
+            # dedup accounting from record metadata (no per-blob stats):
+            # everything the image references that did NOT cross the wire.
+            stats.blobs_dedup = total_refs - stats.blobs_sent
+            stats.bytes_deduped = total_payload - stats.bytes_payload
+            stats.wall_s = time.perf_counter() - t0
+            fan.replicas[i].stats = stats
+
+        def safe_finalize(i: int) -> None:
+            try:
+                finalize(i)
+            except Exception as e:
+                fail(i, e)
+
+        live = [i for i in range(len(stores)) if alive(i)]
+        if len(live) > 1 and pool is not None:
+            for f in [pool.submit(safe_finalize, i) for i in live]:
+                f.result()
+        else:
+            for i in live:
+                safe_finalize(i)
+    fan.wall_s = time.perf_counter() - t0
+    return fan
+
+
+def push_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,
+               ) -> PushStats:
+    """O(changed-bytes) push (module docstring): the single-destination
+    form of ``replicate_fanout`` — one have-set negotiation, only missing
+    layers + blobs over the pipelined transfer, incremental remote
+    verification at commit. Failures re-raise instead of being isolated."""
+    fan = replicate_fanout(src, [dst], name, tag)
+    rep = fan.replicas[0]
+    if rep.exception is not None:
+        raise rep.exception
+    return rep.stats
 
 
 def pull_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,

@@ -140,15 +140,17 @@ class BuildReport:
 class LayerStore:
     """See module docstring. ``durability``:
 
+    * ``"batch"`` (the default) — blob/layer writes skip the inline
+      per-file fsync; at the commit point (``write_image``, before the
+      manifest rename) the dirty FILES are fsync'd concurrently in one
+      deferred batch, then their directories. Durability is equivalent to
+      "full" once the manifest is visible — the fsyncs are deferred and
+      overlapped, not skipped. The manifest rename remains the commit
+      point, so a crash mid-save still leaves the previous image intact.
     * ``"full"``  — every blob/layer write is fsync'd before it is linked
-      in (the seed behavior; one fsync per chunk).
-    * ``"batch"`` — blob/layer writes skip the inline per-file fsync; at
-      the commit point (``write_image``, before the manifest rename) the
-      dirty FILES are fsync'd concurrently in one deferred batch, then
-      their directories. Durability is equivalent to "full" once the
-      manifest is visible — the fsyncs are deferred and overlapped, not
-      skipped. The manifest rename remains the commit point, so a crash
-      mid-save still leaves the previous image intact.
+      in (the seed behavior; one fsync per chunk). Only useful when a
+      caller needs every write durable BEFORE a commit point exists —
+      e.g. writing blobs it never intends to commit under a manifest.
 
     ``record_fingerprints`` — store a per-chunk fingerprint sidecar on each
     TensorRecord at build time (excluded from content checksums), enabling
@@ -156,7 +158,7 @@ class LayerStore:
     """
 
     def __init__(self, root: str, chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-                 durability: str = "full", record_fingerprints: bool = True):
+                 durability: str = "batch", record_fingerprints: bool = True):
         if durability not in ("full", "batch"):
             raise ValueError(f"unknown durability mode {durability!r}")
         self.root = root
@@ -558,13 +560,23 @@ class LayerStore:
     def load_layer_payload(self, layer: LayerDescriptor) -> Dict[str, np.ndarray]:
         return {r.name: assemble_tensor(r, self.read_blob) for r in layer.records}
 
-    def load_image_payload(self, name: str, tag: str) -> Dict[str, np.ndarray]:
+    def load_image_payload(self, name: str, tag: str,
+                           names: Optional[Sequence[str]] = None
+                           ) -> Dict[str, np.ndarray]:
+        """Assemble an image's tensors from their chunk blobs. ``names``
+        restricts assembly to those tensors (the sparse-refresh path:
+        O(changed tensors) of blob reads instead of O(image)); None loads
+        everything."""
         manifest, _ = self.read_image(name, tag)
+        want = None if names is None else set(names)
         out: Dict[str, np.ndarray] = {}
         for lid in manifest.layer_ids:
             layer = self.read_layer(lid)
-            if not layer.empty:
-                out.update(self.load_layer_payload(layer))
+            if layer.empty:
+                continue
+            for r in layer.records:
+                if want is None or r.name in want:
+                    out[r.name] = assemble_tensor(r, self.read_blob)
         return out
 
     # ---------------------------------------------------------- verification

@@ -1,3 +1,5 @@
-from .engine import CheckpointFollower, Engine, GenerationResult
+from .engine import (CheckpointFollower, Engine, GenerationResult,
+                     SparseUpdate, changed_tensor_paths)
 
-__all__ = ["CheckpointFollower", "Engine", "GenerationResult"]
+__all__ = ["CheckpointFollower", "Engine", "GenerationResult",
+           "SparseUpdate", "changed_tensor_paths"]

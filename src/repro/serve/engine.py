@@ -9,20 +9,26 @@ common length.
 ``CheckpointFollower`` closes the §III.C redeployment loop for serving:
 instead of re-downloading whole checkpoints, it pulls per-save DELTAS from
 the training store (core.registry.pull_delta — one have-set negotiation,
-only changed chunks over the wire, incremental verification) and hands the
-refreshed params to ``Engine.refresh`` — weight hot-swap without
-recompiling the jitted prefill/decode functions.
+only changed chunks over the wire, incremental verification) and the delta
+stays sparse all the way into the model: ``poll`` compares the pulled
+revision's records against the previous one (pure metadata — the stored
+chunk lists name exactly which tensors moved), assembles ONLY the changed
+tensors from the local store, and ``Engine.refresh(..., changed=...)``
+device-puts only those leaves into the live param tree — replica refresh
+cost is O(changed tensors), not O(model), and bit-identical to a full
+reload (tests prove it). A structural change (tensor added/removed, shape
+or dtype moved) falls back to the full reload automatically.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Any, Iterable, Optional, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import LayerStore, PushStats, pull_delta
+from ..core import LayerStore, PushStats, diff_tensor_records, pull_delta
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
 
@@ -33,20 +39,112 @@ class GenerationResult:
     logits_last: np.ndarray
 
 
+def changed_tensor_paths(store: LayerStore, image: str, old_tag: str,
+                         new_tag: str) -> Optional[Set[str]]:
+    """The sparse-refresh plan between two tags a store holds: tensor
+    names whose stored chunk lists differ (core.diff.diff_tensor_records —
+    metadata only, no blob reads). None = structural change or unreadable
+    base: caller must fall back to a full reload."""
+    try:
+        old_m, _ = store.read_image(image, old_tag)
+        new_m, _ = store.read_image(image, new_tag)
+        old_layers = [store.read_layer(lid) for lid in old_m.layer_ids]
+        new_layers = [store.read_layer(lid) for lid in new_m.layer_ids]
+    except (OSError, ValueError, KeyError):
+        return None
+    return diff_tensor_records(old_layers, new_layers)
+
+
+@dataclass
+class SparseUpdate:
+    """One checkpoint transition as ``CheckpointFollower.poll`` returns
+    it. Iterates as the historical ``(step, params, opt_state)`` triple;
+    ``changed_params``/``changed_opt`` name the leaf paths that actually
+    moved ('/'-joined, relative to each tree's root). ``None`` means a
+    FULL update (first poll, or sparse fallback) — params/opt_state then
+    hold the whole trees; otherwise they hold ONLY the changed leaves.
+    Always consume as ``engine.refresh(upd.params, upd.changed_params)``
+    (correct for both cases); a bare full swap of a sparse update's
+    partial tree would drop the unchanged weights — callers that need the
+    old whole-tree-every-poll behavior pass ``sparse=False`` to the
+    follower."""
+
+    step: int
+    params: Any
+    opt_state: Any
+    changed_params: Optional[Set[str]] = None
+    changed_opt: Optional[Set[str]] = None
+    tensors_loaded: int = 0       # tensors assembled from the local store
+
+    @property
+    def full(self) -> bool:
+        return self.changed_params is None
+
+    def __iter__(self):
+        yield from (self.step, self.params, self.opt_state)
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.last_refresh_leaves = 0
         self._prefill = jax.jit(lambda p, t: prefill(cfg, p, t))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
 
-    def refresh(self, params) -> None:
+    def refresh(self, params,
+                changed: Optional[Iterable[str]] = None) -> int:
         """Hot-swap weights (e.g. from CheckpointFollower.poll). Params are
         a jit argument, so same-shape updates reuse the compiled
-        prefill/decode executables — no retrace, no downtime."""
-        self.params = params
+        prefill/decode executables — no retrace, no downtime.
+
+        ``changed=None`` is the full swap: ``params`` replaces the whole
+        tree. With ``changed`` (leaf paths, '/'-joined — a SparseUpdate's
+        ``changed_params``), ``params`` need only hold those leaves: each
+        one is device-put into a copy-on-write clone of the live tree
+        (O(changed tensors) of H2D, the unchanged leaves stay resident and
+        shared), which is bit-identical to a full reload of the same
+        revision. Returns the number of leaves swapped in
+        (``last_refresh_leaves`` keeps it for telemetry)."""
+        if changed is None:
+            self.params = params
+            self.last_refresh_leaves = len(jax.tree.leaves(params))
+            return self.last_refresh_leaves
+        root = dict(self.params)
+        fresh = {id(root)}          # nodes already copied this refresh
+        n = 0
+        for path in sorted(set(changed)):
+            node, parts = root, path.split("/")
+            for p in parts[:-1]:
+                nxt = node.get(p)
+                if not isinstance(nxt, dict):
+                    # a changed path whose parent isn't a subtree of the
+                    # live tree is a broken sparse plan (stale changed set,
+                    # restructured tree): grafting a new subtree would
+                    # silently desync the pytree from the jitted signature
+                    raise KeyError(
+                        f"changed path {path!r}: {p!r} is not a subtree "
+                        "of the live params (stale sparse plan? use a "
+                        "full refresh)")
+                if id(nxt) not in fresh:
+                    nxt = dict(nxt)
+                node[p] = nxt
+                fresh.add(id(nxt))
+                node = nxt
+            if parts[-1] not in node:
+                raise KeyError(
+                    f"changed path {path!r} is not a leaf of the live "
+                    "params (stale sparse plan? use a full refresh)")
+            leaf = params
+            for p in parts:
+                leaf = leaf[p]
+            node[parts[-1]] = jax.device_put(leaf)
+            n += 1
+        self.params = root
+        self.last_refresh_leaves = n
+        return n
 
     def generate(self, prompts: np.ndarray, steps: int,
                  temperature: float = 0.0, seed: int = 0,
@@ -107,27 +205,36 @@ class CheckpointFollower:
 
     ``remote`` is the training-side LayerStore (or its path); ``local`` is
     this server's store. ``poll()`` pulls any checkpoint newer than the
-    last one seen — O(changed bytes) on the wire — and returns
-    (step, params, opt_state) ready for ``Engine.refresh``, or None when
-    already up to date. The local store keeps the ``keep`` newest
-    checkpoints and mark-and-sweeps the rest after each pull, so a
-    long-running replica's disk stays bounded (mirrors
-    CheckpointManager._gc on the training side).
+    last one seen — O(changed bytes) on the wire — and returns a
+    ``SparseUpdate`` (iterates as the historical (step, params, opt_state)
+    triple) ready for ``Engine.refresh``, or None when already up to date.
+    With ``sparse`` (the default) every poll after the first assembles
+    ONLY the tensors whose records changed between the previous and the
+    pulled revision — O(changed tensors) of local blob reads — and names
+    them in ``changed_params``/``changed_opt`` so the engine can
+    device-put just those leaves; structural changes fall back to a full
+    load. The local store keeps the ``keep`` newest checkpoints and
+    mark-and-sweeps the rest after each pull, so a long-running replica's
+    disk stays bounded (mirrors CheckpointManager._gc on the training
+    side).
     """
 
     IMAGE = "ckpt"
 
-    def __init__(self, remote, local, image: str = IMAGE, keep: int = 2):
+    def __init__(self, remote, local, image: str = IMAGE, keep: int = 2,
+                 sparse: bool = True):
         self.remote = remote if isinstance(remote, LayerStore) \
             else LayerStore(str(remote))
         self.local = local if isinstance(local, LayerStore) \
             else LayerStore(str(local))
         self.image = image
         self.keep = keep
+        self.sparse = sparse
         self.last_step: Optional[int] = None
         self.last_pull: Optional[PushStats] = None
+        self.last_update: Optional[SparseUpdate] = None
 
-    def poll(self) -> Optional[Tuple[int, Any, Any]]:
+    def poll(self) -> Optional[SparseUpdate]:
         # lazy import: ckpt depends on core only, but keep serve->ckpt
         # out of module import time. The shared helpers guarantee the
         # replica and the trainer agree on tag format + retention.
@@ -139,13 +246,32 @@ class CheckpointFollower:
             return None
         tag = f"step-{step:08d}"
         self.last_pull = pull_delta(self.remote, self.local, self.image, tag)
+        # sparse plan BEFORE retention prunes the previous tag away
+        changed: Optional[Set[str]] = None
+        if self.sparse and self.last_step is not None:
+            prev_tag = f"step-{self.last_step:08d}"
+            changed = changed_tensor_paths(self.local, self.image,
+                                           prev_tag, tag)
+        flat = self.local.load_image_payload(
+            self.image, tag, names=None if changed is None else changed)
         self.last_step = step
         # retention: drop superseded local checkpoints + sweep their blobs
         prune_steps(self.local, self.image, self.keep)
-        flat = self.local.load_image_payload(self.image, tag)
         opt_flat = {k[len("opt/"):]: v for k, v in flat.items()
                     if k.startswith("opt/")}
         opt_flat.pop("__step__", None)
         params_flat = {k[len("params/"):]: v for k, v in flat.items()
                        if k.startswith("params/")}
-        return step, unflatten_tree(params_flat), unflatten_tree(opt_flat)
+        self.last_update = SparseUpdate(
+            step=step,
+            params=unflatten_tree(params_flat),
+            opt_state=unflatten_tree(opt_flat),
+            changed_params=None if changed is None else
+            {k[len("params/"):] for k in changed
+             if k.startswith("params/")},
+            changed_opt=None if changed is None else
+            {k[len("opt/"):] for k in changed
+             if k.startswith("opt/") and k != "opt/__step__"},
+            tensors_loaded=len(flat),
+        )
+        return self.last_update

@@ -1,0 +1,457 @@
+"""Fan-out delta replication + delta-aware serving refresh: one negotiated
+have-set and one source read pass for N replicas, per-replica failure
+isolation with converging retries, SIGKILL atomicity across the fleet, and
+the sparse CheckpointFollower/Engine.refresh path (partial refresh must be
+bit-identical to a full reload)."""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, PushRejected,
+                        diff_tensor_records, inject_payload_update,
+                        push_delta, replicate_fanout)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "src", "content"),
+    Instruction("RUN", "deps", "content"),            # independent of src
+    Instruction("CMD", "run", "config"),
+]
+
+
+def mk(tmp_path, name):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+def make_payloads(rng):
+    return {
+        "src": {"a.py": rng.standard_normal(1000).astype(np.float32),
+                "b.py": rng.standard_normal(500).astype(np.float32)},
+        "deps": {"lib": rng.standard_normal(4000).astype(np.float32)},
+    }
+
+
+def build_v1(store, payloads):
+    prov = {k: (lambda v=v: v) for k, v in payloads.items()}
+    store.build_image("app", "v1", INS, prov)
+
+
+def inject_v2(store, payloads):
+    src2 = {k: v.copy() for k, v in payloads["src"].items()}
+    src2["b.py"][3] = 42.0                        # ONE changed 512 B chunk
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"deps": lambda: payloads["deps"]})
+    return src2
+
+
+def snapshot(store, name, tag):
+    manifest, config = store.read_image(name, tag)
+    layers, blobs = {}, {}
+    for lid in manifest.layer_ids:
+        with open(store._layer_path(lid), "rb") as f:
+            layers[lid] = f.read()
+        for rec in store.read_layer(lid).records:
+            for h in rec.chunks:
+                blobs[h] = store.read_blob(h)
+    return {"manifest": manifest.to_json(), "config": config.to_json(),
+            "layers": layers, "blobs": blobs}
+
+
+def count_reads(store):
+    """Shadow ``read_blob`` with a counting wrapper (independent proof of
+    FanoutStats.source_blob_reads)."""
+    counter = {"n": 0}
+    orig = store.read_blob
+
+    def counting(h):
+        counter["n"] += 1
+        return orig(h)
+
+    store.read_blob = counting
+    return counter
+
+
+# ---------------------------------------------------------------- fan-out
+def test_fanout_bit_identical_to_push_delta(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    replicas = [mk(tmp_path, f"r{i}") for i in range(3)]
+    single = mk(tmp_path, "single")
+    for tag in ("v1", "v2"):
+        fan = replicate_fanout(store, replicas, "app", tag)
+        assert fan.ok and fan.n_ok == 3
+        push_delta(store, single, "app", tag)
+        want = snapshot(single, "app", tag)
+        for r in replicas:
+            assert snapshot(r, "app", tag) == want
+            assert r.verify_image("app", tag, deep=True) == []
+
+
+def test_fanout_one_round_one_read_pass_mixed_staleness(tmp_path, rng):
+    """Replicas at DIFFERENT states: one holds v1 (missing only the delta),
+    one is empty (missing everything), one already holds v2. One
+    negotiation round; each blob read from the source exactly once —
+    counter-proved — and per-replica send lists carved from that pass."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    warm, cold, done = (mk(tmp_path, n) for n in ("warm", "cold", "done"))
+    push_delta(store, warm, "app", "v1")
+    push_delta(store, done, "app", "v2")
+
+    counter = count_reads(store)
+    fan = replicate_fanout(store, [warm, cold, done], "app", "v2")
+    assert fan.ok
+    assert fan.negotiation_rounds == 1
+    # union of missing blobs == what the cold replica needs (superset of
+    # warm's one changed chunk; done needs nothing)
+    assert fan.source_blob_reads == fan.blobs_broadcast == counter["n"]
+    s_warm, s_cold, s_done = (r.stats for r in fan.replicas)
+    assert s_warm.blobs_sent == 1            # just the changed chunk
+    assert s_warm.bytes_payload == 512
+    assert s_cold.blobs_sent == counter["n"]  # everything, from SAME reads
+    assert s_done.blobs_sent == 0
+    assert s_done.layers_dedup > 0
+    for r, stats in zip((warm, cold, done), (s_warm, s_cold, s_done)):
+        assert r.verify_image("app", "v2", deep=True) == []
+        assert stats.bytes_sent == stats.bytes_payload + stats.bytes_meta
+    # wire amplification per replica stays O(what THAT replica lacked):
+    # warm's wire is the changed chunk + metadata, far below cold's
+    assert s_warm.bytes_sent < s_cold.bytes_sent / 2
+
+
+def test_fanout_failed_replica_isolated_and_retry_converges(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    replicas = [mk(tmp_path, f"r{i}") for i in range(3)]
+    fan = replicate_fanout(store, replicas, "app", "v1")
+    assert fan.ok
+    inject_v2(store, payloads)
+
+    class Boom(RuntimeError):
+        pass
+
+    def dying_write_layer(layer, encoded=None):
+        raise Boom("disk full")
+
+    replicas[1].write_layer = dying_write_layer      # instance shadow
+    try:
+        fan = replicate_fanout(store, replicas, "app", "v2")
+    finally:
+        del replicas[1].write_layer
+    # the sick replica is isolated; the healthy ones committed
+    assert not fan.ok and fan.n_ok == 2
+    assert fan.replicas[1].error is not None
+    assert isinstance(fan.replicas[1].exception, Boom)
+    assert fan.replicas[1].stats is None
+    for i in (0, 2):
+        assert fan.replicas[i].ok
+        assert replicas[i].verify_image("app", "v2", deep=True) == []
+    # the failed replica kept its previous tag fully intact
+    assert replicas[1].list_tags("app") == ["v1"]
+    assert replicas[1].verify_image("app", "v1", deep=True) == []
+
+    # retry converges: the failed replica catches up, the healthy ones
+    # dedup everything (no payload resent to them)
+    fan = replicate_fanout(store, replicas, "app", "v2")
+    assert fan.ok
+    assert fan.replicas[0].stats.bytes_payload == 0
+    assert fan.replicas[2].stats.bytes_payload == 0
+    assert replicas[1].verify_image("app", "v2", deep=True) == []
+
+
+def test_fanout_mutation_gate_per_replica(tmp_path, rng):
+    """A self-consistent in-place mutation at the source (same layer ids,
+    re-keyed checksums/chains — the strongest naive bypass) is rejected at
+    EVERY replica's negotiation gate, before a byte moves, while a replica
+    that never saw the original id still accepts the image."""
+    from repro.core import (BuildReport, ImageConfig, apply_edits,
+                            chain_checksum, diff_layer_host, new_uuid)
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    seen = [mk(tmp_path, f"seen{i}") for i in range(2)]
+    fan = replicate_fanout(store, seen, "app", "v1")
+    assert fan.ok
+    before = [snapshot(r, "app", "v1") for r in seen]
+
+    # mutate src in place AND re-key the whole image so it self-verifies
+    m, cfg = store.read_image("app", "v1")
+    layers = [store.read_layer(lid, use_cache=False) for lid in m.layer_ids]
+    src2 = {k: v.copy() for k, v in payloads["src"].items()}
+    src2["b.py"][0] = 9.0
+    apply_edits(store, layers[1], diff_layer_host(layers[1], src2),
+                BuildReport())
+    parent, checksums, chains = None, {}, {}
+    for layer in layers:
+        layer.chain = chain_checksum(parent, layer.checksum,
+                                     layer.instruction.text)
+        store.write_layer(layer)
+        checksums[layer.layer_id] = layer.checksum
+        chains[layer.layer_id] = layer.chain
+        parent = layer.chain
+    new_cfg = ImageConfig(config_id=new_uuid(), arch=cfg.arch,
+                          version=cfg.version + 1, layer_checksums=checksums,
+                          layer_chains=chains, history=cfg.history)
+    m.config_id = new_cfg.config_id
+    store.write_image(m, new_cfg)
+
+    fresh = mk(tmp_path, "fresh")               # never held the old ids
+    fan = replicate_fanout(store, seen + [fresh], "app", "v1")
+    assert fan.n_ok == 1 and fan.replicas[2].ok
+    for i, rep in enumerate(fan.replicas[:2]):
+        assert isinstance(rep.exception, PushRejected)
+        # the mutated bytes never reached the replica
+        assert snapshot(seen[i], "app", "v1") == before[i]
+    assert fresh.verify_image("app", "v1", deep=True) == []
+
+
+def test_fanout_source_verify_failure_raises(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    m, _ = store.read_image("app", "v1")
+    os.remove(store._layer_path(m.layer_ids[1]))     # break the source
+    with pytest.raises(PushRejected):
+        replicate_fanout(store, [mk(tmp_path, "r0")], "app", "v1")
+
+
+def test_fanout_kill9_leaves_no_torn_replica(tmp_path):
+    """SIGKILL mid-fan-out: every replica must be either fully at the old
+    tag or fully at the new one — never torn — and a retry converges the
+    whole fleet."""
+    root = str(tmp_path)
+    script = textwrap.dedent(f"""
+        import os, signal
+        import numpy as np
+        from repro.core import (Instruction, LayerStore,
+                                inject_payload_update, replicate_fanout)
+
+        ins = [Instruction("FROM", "base", "config"),
+               Instruction("COPY", "src", "content"),
+               Instruction("CMD", "run", "config")]
+        payloads = {{"src": {{"w": np.arange(2000, dtype=np.float32)}}}}
+        root = {root!r}
+        store = LayerStore(os.path.join(root, "src"), chunk_bytes=256)
+        prov = {{k: (lambda v=v: v) for k, v in payloads.items()}}
+        store.build_image("app", "v1", ins, prov)
+        replicas = [LayerStore(os.path.join(root, f"r{{i}}"),
+                               chunk_bytes=256) for i in range(2)]
+        fan = replicate_fanout(store, replicas, "app", "v1")
+        assert fan.ok
+        new = {{"src": {{"w": payloads["src"]["w"] + 1.0}}}}
+        inject_payload_update(store, "app", "v1", "v2", new)
+        print("READY", flush=True)
+
+        # die the hard way inside replica 1's commit: blobs + descriptors
+        # already landed (un-fsynced, batch durability), manifest rename
+        # for THAT replica never happens
+        def dying_write_image(manifest, config):
+            os.kill(os.getpid(), signal.SIGKILL)
+        replicas[1].write_image = dying_write_image
+        replicate_fanout(store, replicas, "app", "v2")
+        print("UNREACHABLE", flush=True)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env, timeout=120)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert "READY" in r.stdout
+    assert "UNREACHABLE" not in r.stdout
+
+    store = LayerStore(os.path.join(root, "src"), chunk_bytes=256)
+    replicas = [LayerStore(os.path.join(root, f"r{i}"), chunk_bytes=256)
+                for i in range(2)]
+    # every replica is at a consistent point: old tag or new tag, every
+    # visible tag fully verifiable — no torn state
+    for rep in replicas:
+        tags = rep.list_tags("app")
+        assert "v1" in tags and set(tags) <= {"v1", "v2"}
+        for tag in tags:
+            assert rep.verify_image("app", tag, deep=True) == []
+    # retry converges the whole fleet (orphans re-verified, never trusted)
+    fan = replicate_fanout(store, replicas, "app", "v2")
+    assert fan.ok
+    for rep in replicas:
+        assert rep.verify_image("app", "v2", deep=True) == []
+
+
+# ------------------------------------------------- sparse serving refresh
+def _dtype_tree(rng):
+    import ml_dtypes
+    return {
+        "f32": rng.standard_normal((8, 16)).astype(np.float32),
+        "bf16": rng.standard_normal(640).astype(ml_dtypes.bfloat16),
+        "i8": rng.integers(-100, 100, 1500).astype(np.int8),
+        "i32": rng.integers(-5, 5, 300).astype(np.int32),
+        "flag": rng.standard_normal(520) > 0,
+        "blocks": {"w0": rng.standard_normal(700).astype(np.float32),
+                   "w1": rng.standard_normal(700).astype(np.float32)},
+    }
+
+
+def _leaves(tree, prefix=""):
+    out = {}
+    for k in sorted(tree):
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(tree[k], dict):
+            out.update(_leaves(tree[k], path))
+        else:
+            out[path] = tree[k]
+    return out
+
+
+def _mk_engine(params):
+    from repro.configs import get_smoke_config
+    from repro.serve import Engine
+    return Engine(get_smoke_config("yi-6b"), params, max_len=32)
+
+
+def test_follower_sparse_poll_and_partial_refresh_bit_identical(tmp_path,
+                                                                rng):
+    """The full consumer loop: save -> sparse poll -> partial refresh. The
+    partially-refreshed live tree must be bit-identical (values AND
+    dtypes) to a full reload of the same step, across dtypes, while only
+    the changed leaves were loaded/device-put."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    params = _dtype_tree(rng)
+    opt = {"m": np.zeros(64, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"))
+    upd = fol.poll()
+    assert upd is not None and upd.full
+    step, p0, o0 = upd                      # historical triple unpacking
+    assert step == 0
+    eng = _mk_engine(p0)
+    assert eng.refresh(p0) == len(_leaves(p0))
+
+    # touch a few leaves of different dtypes (one chunk each)
+    params2 = {k: (dict(v) if isinstance(v, dict) else v)
+               for k, v in params.items()}
+    params2["f32"] = params["f32"].copy()
+    params2["f32"][1, 2] += 1.0
+    params2["bf16"] = params["bf16"].copy()
+    params2["bf16"][5] += 1.0
+    params2["i8"] = params["i8"].copy()
+    params2["i8"][7] += 3
+    params2["blocks"]["w1"] = params["blocks"]["w1"].copy()
+    params2["blocks"]["w1"][0] -= 2.0
+    mgr.save(1, params2, opt)
+
+    upd = fol.poll()
+    assert upd is not None and not upd.full
+    assert upd.changed_params == {"f32", "bf16", "i8", "blocks/w1"}
+    assert upd.changed_opt == set()          # only opt/__step__ moved
+    # sparse load: only the changed tensors (+ the step scalar) assembled
+    assert upd.tensors_loaded == len(upd.changed_params) + 1
+    n = eng.refresh(upd.params, upd.changed_params)
+    assert n == eng.last_refresh_leaves == 4
+
+    # bit-identity against an independent FULL reload of step 1
+    full = CheckpointFollower(mgr.store, str(tmp_path / "serve_full"),
+                              sparse=False).poll()
+    assert full is not None and full.full
+    live, want = _leaves(eng.params), _leaves(full.params)
+    assert set(live) == set(want)
+    for path in want:
+        got = np.asarray(live[path])
+        assert got.dtype == np.asarray(want[path]).dtype, path
+        assert np.array_equal(got, np.asarray(want[path])), path
+    # unchanged leaves were not even copied: same objects as before
+    assert live["i32"] is p0["i32"]
+    assert live["blocks/w0"] is p0["blocks"]["w0"]
+
+
+def test_follower_sparse_falls_back_on_structure_change(tmp_path, rng):
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"))
+    assert fol.poll().full
+    # adding a tensor is a structure change -> save_incremental falls back
+    # to a rebuild, and the follower must fall back to a FULL update
+    params2 = dict(params, extra=rng.standard_normal(40).astype(np.float32))
+    mgr.save(1, params2, opt)
+    upd = fol.poll()
+    assert upd.full
+    assert set(_leaves(upd.params)) == {"extra", "w"}
+    assert np.array_equal(np.asarray(upd.params["extra"]),
+                          params2["extra"])
+
+
+def test_diff_tensor_records_plan(tmp_path, rng):
+    """The metadata plan itself: changed chunk lists -> names; structural
+    moves -> None."""
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512)
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    m1, _ = store.read_image("app", "v1")
+    m2, _ = store.read_image("app", "v2")
+    l1 = [store.read_layer(lid) for lid in m1.layer_ids]
+    l2 = [store.read_layer(lid) for lid in m2.layer_ids]
+    assert diff_tensor_records(l1, l2) == {"b.py"}
+    assert diff_tensor_records(l1, l1) == set()
+    # dtype move is structural
+    import dataclasses
+    recs = [dataclasses.replace(r, dtype="int8") for r in l2[1].records]
+    l2_bad = list(l2)
+    l2_bad[1] = dataclasses.replace(l2[1], records=recs)
+    assert diff_tensor_records(l1, l2_bad) is None
+
+
+def test_engine_partial_refresh_counts_and_strictness(rng):
+    params = {"a": np.ones(4, np.float32),
+              "nest": {"b": np.zeros(4, np.float32)}}
+    eng = _mk_engine(params)
+    assert eng.refresh(params) == 2              # full swap counts leaves
+    sparse = {"nest": {"b": np.full(4, 7.0, np.float32)}}
+    assert eng.refresh(sparse, {"nest/b"}) == 1
+    assert np.array_equal(np.asarray(eng.params["nest"]["b"]),
+                          sparse["nest"]["b"])
+    assert eng.params["a"] is params["a"]        # untouched leaf shared
+    # a changed path that isn't part of the live tree — missing parent OR
+    # missing leaf — is a broken sparse plan: rejected, never grafted
+    # (grafting would desync the pytree from the jitted signature)
+    with pytest.raises(KeyError):
+        eng.refresh({"ghost": {"x": np.ones(2, np.float32)}}, {"ghost/x"})
+    with pytest.raises(KeyError):
+        eng.refresh({"nest": {"c": np.ones(4, np.float32)}}, {"nest/c"})
+    with pytest.raises(KeyError):
+        eng.refresh({"w_new": np.ones(4, np.float32)}, {"w_new"})
+
+
+def test_store_default_durability_is_batch(tmp_path):
+    """ROADMAP satellite: batch is the store-wide default now — writes
+    defer their fsyncs to the commit point."""
+    store = LayerStore(str(tmp_path / "s"), chunk_bytes=512)
+    assert store.durability == "batch"
+    from repro.core import sha256_hex
+    data = b"y" * 256
+    store.write_blob(sha256_hex(data), data)
+    assert store.fsyncs == 0                     # deferred, not inline
+    store.sync_for_commit()
+    assert store.fsyncs == 2                     # file + its directory
+    from repro.ckpt import CheckpointPolicy
+    assert CheckpointPolicy().durability == "batch"

@@ -3,6 +3,8 @@ bit-identical to the seed full push at the remote, keep the paper's
 in-place-mutation rejection, stay crash-atomic, and verify incrementally
 (only new layers deeply). Plus the DeltaBundle wire-format round trip and
 the checkpoint replicate/follower integration."""
+import os
+
 import numpy as np
 import pytest
 
@@ -225,7 +227,6 @@ def test_torn_orphan_blob_replaced_on_retry(tmp_path, rng):
     """A torn blob (exists on disk, bytes don't match its address — the
     un-fsynced leftover of a crashed batch-mode push) must be detected at
     the blob probe, deleted and re-sent, not trusted by existence."""
-    import os
     store = mk(tmp_path)
     src, build, deps = build_v1(store, rng)
     remote = mk(tmp_path, "remote")
@@ -416,7 +417,9 @@ if HAVE_HYPOTHESIS:
                            config=config, layers=layers, rekey=rekey,
                            blobs=blobs)
 
-    @settings(max_examples=30, deadline=None)
+    from conftest import max_examples
+
+    @settings(max_examples=max_examples(30), deadline=None)
     @given(bundles())
     def test_delta_bundle_roundtrip(bundle):
         back = decode_delta(encode_delta(bundle))

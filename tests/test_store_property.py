@@ -6,6 +6,8 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from conftest import max_examples
+
 from repro.core import (Instruction, LayerStore, inject_payload_update,
                         new_uuid)
 
@@ -33,7 +35,7 @@ def payload_and_edits(draw):
     return payload, edits
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=max_examples(25), deadline=None)
 @given(payload_and_edits())
 def test_injection_equivalence_and_isolation(tmp_path_factory, pe):
     payload, edits = pe
@@ -68,7 +70,7 @@ def test_injection_equivalence_and_isolation(tmp_path_factory, pe):
     assert l_inj.checksum == l_rb.checksum     # same content => same checksum
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=max_examples(15), deadline=None)
 @given(st.integers(1, 5000), st.integers(0, 2**31))
 def test_chunking_roundtrip(n, seed):
     from repro.core import bytes_to_tensor, chunk_tensor
