@@ -89,6 +89,29 @@ INVARIANTS = [
     ("fanout.json", "N4.refresh.refresh_only_changed", True),
     ("fanout.json", "N2.refresh.refresh_bit_identical", True),
     ("fanout.json", "N4.refresh.refresh_bit_identical", True),
+    # relay tier (trainer -> relay -> C edges): the relay reads each
+    # changed blob from its parent exactly once (counter-proved) ...
+    ("relay.json", "C2.parent_reads_equal_changed", True),
+    ("relay.json", "C4.parent_reads_equal_changed", True),
+    # ... in-flight re-fan forwards straight from the wire buffer — ZERO
+    # local reads, no per-child re-read/re-hash ...
+    ("relay.json", "C2.inflight_zero_local_reads", True),
+    ("relay.json", "C4.inflight_zero_local_reads", True),
+    # ... one negotiation round per tier, parent AND child ...
+    ("relay.json", "C2.one_round_per_tier", True),
+    ("relay.json", "C4.one_round_per_tier", True),
+    # ... stale children are served with ONE local read per blob (C
+    # sequential pushes cost exactly C x the reads) ...
+    ("relay.json", "C2.stale_one_local_read_per_blob", True),
+    ("relay.json", "C4.stale_one_local_read_per_blob", True),
+    ("relay.json", "C2.stale_read_ratio_vs_sequential", 2),
+    ("relay.json", "C4.stale_read_ratio_vs_sequential", 4),
+    # ... every hop's wire stays within 1.25x the changed bytes ...
+    ("relay.json", "C2.within_budget", True),
+    ("relay.json", "C4.within_budget", True),
+    # ... and every edge ends bit-identical to the trainer's save
+    ("relay.json", "C2.edges_bit_identical", True),
+    ("relay.json", "C4.edges_bit_identical", True),
 ]
 
 

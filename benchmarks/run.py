@@ -711,6 +711,208 @@ def bench_fanout(trials: int) -> dict:
     return out
 
 
+def bench_relay(trials: int) -> dict:
+    """Multi-hop relay replication (the edge-tier topology): one trainer
+    feeding a relay that re-fans each k=8-changed-layer save of the
+    512-leaf image to C edge children. Gated claims per C in {2, 4}, all
+    counter-proved against instrumented stores:
+
+    * the relay reads each changed blob from its PARENT exactly once
+      (``FanoutStats.source_blob_reads`` == changed blobs == the
+      instrumented count), and — with ``source="inflight"`` — forwards it
+      to all C children straight from the wire buffer: ZERO local reads,
+      no per-child re-read or re-hash, one negotiation round per tier;
+    * when the children lag an already-current relay (the stale arm), each
+      owed blob is read from the relay's local store exactly ONCE and
+      broadcast — C sequential ``push_delta`` calls cost exactly C x the
+      reads;
+    * wire per hop (trainer->relay and relay->worst edge) stays within
+      1.25x the changed bytes;
+    * after the run, every edge's assembled payload is bit-identical to
+      the trainer's save and every tier passes an independent deep verify.
+    """
+    import collections
+
+    from repro.core import (Instruction, LayerStore, RelayNode, diff_image,
+                            inject_image_multi, push_delta,
+                            replicate_fanout)
+    from .scenarios import _edit_chunks, _gen
+
+    n_layers, leaves_per_layer, edits_per_layer = 8, 64, 2
+    leaf_bytes = chunk_bytes = 128 << 10
+    ins = [Instruction("FROM", "base", "config")]
+    payloads = {}
+    for i in range(n_layers):
+        key = f"layer{i}"
+        ins.append(Instruction("COPY", key, "content"))
+        payloads[key] = {
+            f"L{i}/l{j:03d}": _gen(3000 + i * leaves_per_layer + j,
+                                   leaf_bytes)
+            for j in range(leaves_per_layer)}
+    ins.append(Instruction("CMD", "serve", "config"))
+    keys = list(payloads)                     # ALL k=8 content layers move
+
+    out = {"n_layers": n_layers, "leaves": n_layers * leaves_per_layer,
+           "leaf_bytes": leaf_bytes, "chunk_bytes": chunk_bytes,
+           "trials": trials}
+    root = tempfile.mkdtemp(prefix="lc_relay_")
+
+    def instrument(store):
+        reads = []
+        orig = store.read_blob
+        store.read_blob = lambda h: (reads.append(h), orig(h))[1]
+        return reads
+
+    try:
+        for C in (2, 4):
+            src = LayerStore(os.path.join(root, f"src{C}"),
+                             chunk_bytes=chunk_bytes,
+                             record_fingerprints=False)
+            current = {key: dict(tree) for key, tree in payloads.items()}
+            prov = {key: (lambda v=v: v) for key, v in current.items()}
+            src.build_image("app", "v1", ins, prov)
+            # in-flight arm: trainer -> relay -> C edges
+            relay = RelayNode(
+                LayerStore(os.path.join(root, f"rl{C}"),
+                           chunk_bytes=chunk_bytes,
+                           record_fingerprints=False),
+                children=[LayerStore(os.path.join(root, f"rl{C}e{i}"),
+                                     chunk_bytes=chunk_bytes,
+                                     record_fingerprints=False)
+                          for i in range(C)],
+                source="inflight")
+            # stale arm: relay store warmed separately, children lag by one
+            hot = LayerStore(os.path.join(root, f"hot{C}"),
+                             chunk_bytes=chunk_bytes,
+                             record_fingerprints=False)
+            stale = RelayNode(hot,
+                              children=[LayerStore(
+                                  os.path.join(root, f"st{C}e{i}"),
+                                  chunk_bytes=chunk_bytes,
+                                  record_fingerprints=False)
+                                  for i in range(C)])
+            seq = [LayerStore(os.path.join(root, f"sq{C}e{i}"),
+                              chunk_bytes=chunk_bytes,
+                              record_fingerprints=False)
+                   for i in range(C)]
+            assert replicate_fanout(src, [relay], "app", "v1").deep_ok
+            push_delta(src, hot, "app", "v1")
+            assert replicate_fanout(src, [stale], "app", "v1").deep_ok
+            for r in seq:
+                push_delta(hot, r, "app", "v1")
+
+            fan_t, seq_t = [], []
+            relay_amp, edge_amp = [], []
+            parent_reads_ok = inflight_zero_local = True
+            stale_once_ok = rounds_ok = True
+            stale_ratio = []
+            changed_blobs = changed_bytes = 0
+            tag = "v1"
+            for tr in range(trials):
+                for key in keys:
+                    current[key] = dict(current[key])
+                    for e in range(edits_per_layer):
+                        leaf = [k for k in current[key]][
+                            (tr * edits_per_layer + e) % leaves_per_layer]
+                        current[key][leaf] = _edit_chunks(
+                            current[key][leaf], 1, chunk_bytes, seed=tr + 1)
+                m, _ = src.read_image("app", tag)
+                layers = [src.read_layer(lid) for lid in m.layer_ids]
+                diffs = diff_image(layers,
+                                   {key: current[key] for key in keys})
+                new_tag = f"t{tr + 1}"
+                inject_image_multi(src, "app", tag, new_tag, diffs)
+                changed_blobs = len({e.new_hash for d in diffs.values()
+                                     for e in d.edits})
+                changed_bytes = sum(len(e.data) for d in diffs.values()
+                                    for e in d.edits)
+                tag = new_tag
+
+                # ---- in-flight: one parent read pass, zero local reads
+                p_reads = instrument(src)
+                l_reads = instrument(relay.store)
+                t0 = time.perf_counter()
+                fan = replicate_fanout(src, [relay], "app", tag)
+                fan_t.append(time.perf_counter() - t0)
+                del src.read_blob, relay.store.read_blob
+                assert fan.deep_ok, [r.error for r in fan.replicas]
+                parent_reads_ok &= (fan.source_blob_reads == changed_blobs
+                                    == len(p_reads))
+                inflight_zero_local &= (len(l_reads) == 0
+                                        and relay.local_blob_reads == 0
+                                        and relay.inflight_blobs
+                                        == changed_blobs)
+                rounds_ok &= (fan.negotiation_rounds == 1
+                              and relay.fan.negotiation_rounds == 1)
+                relay_amp.append(fan.replicas[0].stats.bytes_sent
+                                 / max(changed_bytes, 1))
+                edge_amp.append(max(r.stats.bytes_sent
+                                    for r in relay.fan.replicas)
+                                / max(changed_bytes, 1))
+
+                # ---- stale children: ONE local read per blob for C edges,
+                # vs C sequential pushes costing exactly C x the reads
+                push_delta(src, hot, "app", tag)
+                h_reads = instrument(hot)
+                fan2 = replicate_fanout(src, [stale], "app", tag)
+                del hot.read_blob
+                assert fan2.deep_ok, [r.error for r in fan2.replicas]
+                counts = collections.Counter(h_reads)
+                stale_once_ok &= (stale.local_blob_reads == changed_blobs
+                                  == len(counts)
+                                  and max(counts.values()) == 1)
+                h_reads = instrument(hot)
+                t0 = time.perf_counter()
+                for r in seq:
+                    push_delta(hot, r, "app", tag)
+                seq_t.append(time.perf_counter() - t0)
+                del hot.read_blob
+                stale_ratio.append(len(h_reads) / max(changed_blobs, 1))
+
+            # edge payloads bit-identical to the trainer's final save
+            want = src.load_image_payload("app", tag)
+            identical = True
+            for child in relay.children + stale.children:
+                got = child.store.load_image_payload("app", tag)
+                identical &= set(got) == set(want) and all(
+                    np.array_equal(got[p], want[p]) for p in want)
+                identical &= child.store.verify_image("app", tag,
+                                                      deep=True) == []
+
+            f, s = np.asarray(fan_t), np.asarray(seq_t)
+            out[f"C{C}"] = {
+                "n_children": C,
+                "changed_bytes": changed_bytes,
+                "changed_blobs": changed_blobs,
+                "parent_reads_equal_changed": bool(parent_reads_ok),
+                "inflight_zero_local_reads": bool(inflight_zero_local),
+                "one_round_per_tier": bool(rounds_ok),
+                "stale_one_local_read_per_blob": bool(stale_once_ok),
+                "stale_read_ratio_vs_sequential":
+                    float(np.median(np.asarray(stale_ratio))),
+                # the budget is a per-push guarantee: gate the worst trial
+                "relay_hop_amp_max": float(np.max(np.asarray(relay_amp))),
+                "edge_hop_amp_max": float(np.max(np.asarray(edge_amp))),
+                "within_budget": bool(
+                    max(np.max(np.asarray(relay_amp)),
+                        np.max(np.asarray(edge_amp))) <= 1.25),
+                "edges_bit_identical": bool(identical),
+                "relay_fanout": {"median_s": float(np.median(f)),
+                                 "mean_s": float(f.mean())},
+                "sequential_refan": {"median_s": float(np.median(s)),
+                                     "mean_s": float(s.mean())},
+            }
+            print(f"relay_C{C},{np.median(f) * 1e6:.1f},"
+                  f"parent_reads={changed_blobs} local=0 "
+                  f"amp={out[f'C{C}']['edge_hop_amp_max']:.3f}")
+            print(f"relay_C{C}_stale,{np.median(s) * 1e6:.1f},"
+                  f"local_reads={changed_blobs} "
+                  f"ratio={out[f'C{C}']['stale_read_ratio_vs_sequential']:.1f}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
 def bench_fingerprint(trials: int) -> dict:
     """Change-detector throughput: host SHA-256 vs on-device fingerprint
     (jnp path; the Pallas kernel is the TPU-target implementation)."""
@@ -761,6 +963,7 @@ BASELINES = {
     "multilayer_inject": "BENCH_multilayer_inject.json",
     "push_delta": "BENCH_push_delta.json",
     "fanout": "BENCH_fanout.json",
+    "relay": "BENCH_relay.json",
 }
 
 
@@ -786,6 +989,7 @@ def main() -> None:
         "multilayer_inject": lambda: bench_multilayer_inject(trials),
         "push_delta": lambda: bench_push_delta(max(trials // 3, 5)),
         "fanout": lambda: bench_fanout(max(trials // 3, 5)),
+        "relay": lambda: bench_relay(max(trials // 3, 5)),
         "fingerprint": lambda: bench_fingerprint(trials),
         "roofline": bench_roofline,
     }

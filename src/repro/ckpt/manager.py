@@ -45,14 +45,15 @@ checkpoint intact — tests/test_ft.py kills a save mid-flight to prove it.
 """
 from __future__ import annotations
 
+import re
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import (BuildReport, Instruction, LayerStore, diff_image,
-                    fingerprint_tree, fingerprint_tree_packed,
+from ..core import (BuildReport, Instruction, LayerStore, RelayNode,
+                    diff_image, fingerprint_tree, fingerprint_tree_packed,
                     inject_image_multi, push_delta, replicate_fanout)
 
 
@@ -96,27 +97,52 @@ def unflatten_tree(flat: Dict[str, np.ndarray]) -> Any:
 # so the trainer and a serving replica can never disagree about the tag
 # format or the retention semantics.
 
+_STEP_TAG = re.compile(r"step-(\d+)")
+
+
+def step_of_tag(tag: str) -> Optional[int]:
+    """The step number of a canonical step tag, None for anything else.
+    User-pushed tags (``best``, ``release``, even ``step-final``) are not
+    step tags: they must never crash step parsing and never participate in
+    retention — skipping them here is what keeps ``latest_step`` and
+    ``prune_steps`` safe in an image with mixed tags. Canonical means the
+    tag round-trips through ``CheckpointManager.tag_of`` — every caller of
+    ``latest_step`` reconstructs the tag as ``step-{n:08d}``, so a
+    hand-pushed ``step-9`` must count as a user tag too (it would
+    reconstruct to a tag that doesn't exist)."""
+    m = _STEP_TAG.fullmatch(tag)
+    if not m:
+        return None
+    n = int(m.group(1))
+    return n if tag == f"step-{n:08d}" else None
+
+
 def latest_step(store: LayerStore, image: str,
                 fresh: bool = False) -> Optional[int]:
-    """Newest step number among an image's ``step-NNNNNNNN`` tags.
-    ``fresh`` bypasses the store's tag cache (needed when another process
-    commits the tags)."""
-    tags = [t for t in store.list_tags(image, fresh=fresh)
-            if t.startswith("step-")]
-    return max((int(t.split("-")[1]) for t in tags), default=None)
+    """Newest step number among an image's ``step-<digits>`` tags; tags
+    that aren't step tags are skipped, not parsed. ``fresh`` bypasses the
+    store's tag cache (needed when another process commits the tags)."""
+    return max((s for s in (step_of_tag(t)
+                            for t in store.list_tags(image, fresh=fresh))
+                if s is not None), default=None)
 
 
 def prune_steps(store: LayerStore, image: str, keep: int) -> bool:
     """Retention + reclamation: drop step tags beyond the ``keep`` newest,
     then mark-and-sweep the store so their exclusive blobs/layers are
     actually deleted (unbounded disk growth otherwise). Returns whether
-    anything was removed. ``keep<=0`` keeps everything."""
+    anything was removed. ``keep<=0`` keeps everything.
+
+    Ordering is NUMERIC on the parsed step, and non-canonical tags
+    (``best``, ``release``, ``step-final``, a hand-pushed ``step-9``) are
+    never candidates — retention must not be able to delete a user's
+    pin, and must never mistake one for the newest checkpoint."""
     if keep <= 0:
         return False
-    tags = sorted(t for t in store.list_tags(image)
-                  if t.startswith("step-"))
+    steps = sorted((s, t) for t in store.list_tags(image)
+                   if (s := step_of_tag(t)) is not None)
     removed = False
-    for t in tags[:-keep]:
+    for _, t in steps[:-keep]:
         removed = store.remove_image(image, t) or removed
     if removed:
         store.gc()
@@ -294,7 +320,8 @@ class CheckpointManager:
         prune_steps(self.store, self.IMAGE, self.policy.keep)
 
     # --------------------------------------------------------- replication
-    def replicate(self, remote, step: Optional[int] = None):
+    def replicate(self, remote=None, step: Optional[int] = None,
+                  relay=None, source: Optional[str] = None):
         """Ship a checkpoint to serving/registry stores as a DELTA: one
         have-set negotiation + only the chunks a remote is missing cross
         the wire. After an incremental save this is O(changed bytes) —
@@ -304,19 +331,86 @@ class CheckpointManager:
         returns PushStats, failures raise), or a list/tuple of them (->
         ``replicate_fanout``, returns FanoutStats: ONE negotiation round +
         one source read pass for the whole fleet, per-replica failures
-        isolated so one sick replica never blocks the rest)."""
+        isolated so one sick replica never blocks the rest).
+
+        ``relay`` adds multi-hop tiers (trainer -> M relays -> N edge
+        followers each): a dict ``{relay_store_or_path: [children...]}``,
+        or a sequence of ``RelayNode``s / ``(store_or_path, children)``
+        pairs; children may themselves be any of those shapes, so tiers
+        nest. Relays and plain remotes ride the SAME fan-out (one
+        negotiation round, one source read pass); each relay re-fans its
+        pull to its children — streaming from the in-flight pull with
+        ``source="inflight"``, after its own commit with "commit", or each
+        node's configured mode when None. Returns FanoutStats whose
+        ``replicas[i].children`` nests each relay's downstream outcome."""
         self.wait()
+        if remote is None and relay is None:
+            raise ValueError("replicate() needs a destination: pass "
+                             "remote=, relay=, or both")
         step = step if step is not None else self.latest_step()
         if step is None:
             return None
 
         def as_store(r):
-            return r if isinstance(r, LayerStore) else \
-                LayerStore(str(r), chunk_bytes=self.policy.chunk_bytes)
+            # RelayNodes pass through untouched (replicate_fanout accepts
+            # receivers directly), so a relay may ride in a remote list
+            if isinstance(r, (LayerStore, RelayNode)):
+                return r
+            return LayerStore(str(r), chunk_bytes=self.policy.chunk_bytes)
 
+        def as_relays(spec):
+            # dict {store: children} | sequence of RelayNode /
+            # (store, children) pairs — children recurse through the same
+            # shapes, so tiers nest in any of them
+            out = []
+            for item in (spec.items() if isinstance(spec, dict) else spec):
+                if isinstance(item, RelayNode):
+                    out.append(item)
+                    continue
+                store, children = item
+                if isinstance(children, (str, bytes)):
+                    # would be iterated per CHARACTER into junk stores
+                    raise TypeError("relay children must be a sequence, "
+                                    f"not a bare path: {children!r}")
+                kids = []
+                for c in children:
+                    if isinstance(c, dict):
+                        kids.extend(as_relays(c))
+                    elif isinstance(c, (tuple, RelayNode)):
+                        kids.extend(as_relays([c]))
+                    else:
+                        kids.append(as_store(c))
+                out.append(RelayNode(as_store(store), children=kids))
+            return out
+
+        if relay is not None:
+            relays = as_relays(relay)
+            plain = [] if remote is None else (
+                list(remote) if isinstance(remote, (list, tuple)) else [remote])
+            return replicate_fanout(
+                self.store, [as_store(r) for r in plain] + relays,
+                self.IMAGE, self.tag_of(step), source=source)
         if isinstance(remote, (list, tuple)):
+            # source re-modes RelayNodes the caller put in the list; with
+            # none present it would be a silent no-op, so reject it the
+            # same way the single-remote branch does
+            if source is not None and \
+                    not any(isinstance(r, RelayNode) for r in remote):
+                raise ValueError("source= only applies to relay "
+                                 "topologies; no relay in the remote list")
             return replicate_fanout(self.store, [as_store(r) for r in remote],
-                                    self.IMAGE, self.tag_of(step))
+                                    self.IMAGE, self.tag_of(step),
+                                    source=source)
+        if source is not None and not isinstance(remote, RelayNode):
+            raise ValueError("source= only applies to relay topologies; a "
+                             "plain remote has no re-fan to mode")
+        if isinstance(remote, RelayNode):
+            fan = replicate_fanout(self.store, [remote], self.IMAGE,
+                                   self.tag_of(step), source=source)
+            rep = fan.replicas[0]
+            if rep.exception is not None:
+                raise rep.exception
+            return fan
         return push_delta(self.store, as_store(remote), self.IMAGE,
                           self.tag_of(step))
 

@@ -22,8 +22,9 @@ from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
                        chain_checksum, content_checksum,
                        injection_history_entry, new_uuid)
 from .registry import (DeltaReceiver, FanoutStats, HaveSet, PushRejected,
-                       PushStats, ReplicaResult, export_delta, import_delta,
-                       pull, pull_delta, push, push_delta, replicate_fanout)
+                       PushStats, RelayNode, ReplicaResult, export_delta,
+                       import_delta, pull, pull_delta, push, push_delta,
+                       replicate_fanout)
 from .store import BuildReport, LayerStore
 
 __all__ = [
@@ -42,7 +43,7 @@ __all__ = [
     "Instruction", "LayerDescriptor", "Manifest", "chain_checksum",
     "content_checksum", "injection_history_entry", "new_uuid",
     "DeltaReceiver", "FanoutStats", "HaveSet", "PushRejected", "PushStats",
-    "ReplicaResult", "export_delta", "import_delta", "pull", "pull_delta",
-    "push", "push_delta", "replicate_fanout",
+    "RelayNode", "ReplicaResult", "export_delta", "import_delta", "pull",
+    "pull_delta", "push", "push_delta", "replicate_fanout",
     "BuildReport", "LayerStore",
 ]

@@ -62,6 +62,27 @@ class DeltaBundle:
     def payload_bytes(self) -> int:
         return sum(len(b) for b in self.blobs.values())
 
+    def layer_meta(self, held=None) -> Dict[str, tuple]:
+        """{layer_id: (family, content_checksum)} for EVERY manifest layer,
+        in manifest order — the negotiation request a live push derives
+        from its source store, reconstructed from the bundle header so an
+        offline relay (``registry.import_delta`` at a ``RelayNode``) can
+        seed its children with the same have-set exchange. Families of
+        layers the bundle doesn't carry come from ``held`` (a lookup
+        returning the receiver's own descriptor, or None); a layer known
+        to neither side keeps the config's checksum lock with an empty
+        family, which only costs a missed re-key match downstream, never
+        correctness."""
+        carried = {layer.layer_id: layer for layer in self.layers}
+        meta: Dict[str, tuple] = {}
+        for lid in self.manifest.layer_ids:
+            layer = carried.get(lid)
+            if layer is None and held is not None:
+                layer = held(lid)
+            meta[lid] = (layer.family, layer.checksum) if layer is not None \
+                else ("", self.config.layer_checksums.get(lid, ""))
+        return meta
+
 
 def encode_delta(bundle: DeltaBundle) -> bytes:
     index = sorted(bundle.blobs.keys())

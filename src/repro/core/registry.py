@@ -38,9 +38,19 @@ and re-keyed manifest is ACCEPTED):
   slow destination never blocks the healthy ones — a clean retry
   converges it. ``push_delta`` itself is the N=1 special case.
 
+* ``RelayNode`` — the multi-hop form: one store that is a
+  ``DeltaReceiver`` toward its parent and a fan-out source toward its
+  children (trainer -> M relays -> N edge followers each). The parent's
+  delta header seeds the child have-set union, so a blob received once at
+  the relay is forwarded straight from the wire buffer (``inflight``) or
+  read locally exactly once (``commit`` mode / stale children) — never
+  re-read or re-hashed per child — and a child only ever commits after
+  its relay committed.
+
 ``export_delta``/``import_delta`` are the offline (``docker save``-style)
 form of the same protocol: a self-checking ``DeltaBundle`` byte string
-computed against a base tag instead of a live have-set.
+computed against a base tag instead of a live have-set (``import_delta``
+at a ``RelayNode`` re-fans the bundle to an edge tier).
 """
 from __future__ import annotations
 
@@ -155,6 +165,28 @@ class HaveSet:
     exchange_bytes: int = 0      # request+response size (counted as meta)
 
 
+def _stamp_dedup(stats: PushStats, total_refs: int, total_payload: int,
+                 t0: float) -> None:
+    """Post-commit dedup accounting from record metadata (no per-blob
+    stats): everything the image references that did NOT cross the wire.
+    Shared by every fan-out tier so the books can't drift apart."""
+    stats.blobs_dedup = total_refs - stats.blobs_sent
+    stats.bytes_deduped = total_payload - stats.bytes_payload
+    stats.wall_s = time.perf_counter() - t0
+
+
+def _gate_mutations(layer_meta: Dict[str, Tuple[str, str]],
+                    held_checksums: Dict[str, str], who: str) -> None:
+    """The in-place-mutation gate, shared by every tier: a destination
+    holding one of the image's layer ids with a DIVERGED checksum is the
+    paper's exact failure mode — rejected before any byte moves."""
+    for lid, held in held_checksums.items():
+        if layer_meta[lid][1] != held:
+            raise PushRejected(
+                f"layer {lid}: {who} holds a different checksum trace "
+                "for this id (in-place mutation without a new id?)")
+
+
 class _BatchScope:
     """Hold the receiving store in durability="batch" for the lifetime of a
     push so per-blob fsyncs coalesce at the remote manifest commit."""
@@ -195,6 +227,19 @@ class DeltaReceiver:
 
     def __init__(self, store: LayerStore):
         self.store = store
+        self._stats_lock = threading.Lock()   # receive_blob runs on a pool
+        self.begin_push()
+
+    def begin_push(self) -> None:
+        """Reset per-push state. ``push_delta``/``replicate_fanout`` build
+        fresh receivers for plain stores, but a long-lived receiver (a
+        ``RelayNode`` reused across polls/retries, a receiver handed to
+        ``import_delta`` twice) must be re-armed here at the START of each
+        push so one push's verified-blob set or stats never vouch for the
+        next. Deliberately NOT called from ``negotiate``: the
+        ``negotiations`` counter must keep counting across a whole push so
+        ``FanoutStats.negotiation_rounds`` measures extra rounds instead
+        of tautologically reading 1."""
         self.negotiations = 0        # negotiate() exchanges this push
         self._verified_blobs: Set[str] = set()
         self._received_layers: Dict[str, LayerDescriptor] = {}
@@ -209,7 +254,6 @@ class DeltaReceiver:
         self._committed_layers: Optional[Set[str]] = None
         self.rekey: Dict[str, str] = {}
         self.stats = PushStats()
-        self._stats_lock = threading.Lock()   # receive_blob runs on a pool
 
     def _scan_committed(self, name: str) -> Dict[Tuple[str, str], str]:
         """Index this store's committed holdings for ``name``.
@@ -464,11 +508,19 @@ class ReplicaResult:
     the captured failure otherwise. Failures are ISOLATED — a replica that
     rejects, corrupts a transfer or dies never blocks the others; a later
     ``replicate_fanout`` retry converges it (orphan blobs/descriptors are
-    re-verified by the normal negotiate/probe crash-recovery path)."""
+    re-verified by the normal negotiate/probe crash-recovery path).
+
+    ``stats`` is only set for replicas that COMMITTED. A replica that
+    failed mid-push still reports what actually crossed the wire before it
+    dropped out in ``stats_partial`` — bytes of waves never sent to it are
+    never counted anywhere. ``children`` nests the downstream tier's
+    outcome when this replica is a ``RelayNode``."""
 
     stats: Optional[PushStats] = None
     error: Optional[str] = None
     exception: Optional[BaseException] = None
+    stats_partial: Optional[PushStats] = None
+    children: Optional["FanoutStats"] = None
 
     @property
     def ok(self) -> bool:
@@ -486,7 +538,11 @@ class FanoutStats:
     replicas: List[ReplicaResult] = field(default_factory=list)
     negotiation_rounds: int = 0
     source_blob_reads: int = 0
-    blobs_broadcast: int = 0     # unique blobs ANY replica was missing
+    # unique blobs actually SHIPPED to at least one replica. Counted at
+    # ship time, never precomputed: when a replica drops out between
+    # transfer waves, blobs whose only taker died are neither read nor
+    # counted — source_blob_reads == blobs_broadcast stays exact.
+    blobs_broadcast: int = 0
     wall_s: float = 0.0
 
     @property
@@ -497,9 +553,295 @@ class FanoutStats:
     def n_ok(self) -> int:
         return sum(1 for r in self.replicas if r.ok)
 
+    @property
+    def deep_ok(self) -> bool:
+        """ok across EVERY tier: this one and, for relay replicas, the
+        whole downstream topology."""
+        return all(r.ok and (r.children is None or r.children.deep_ok)
+                   for r in self.replicas)
+
+
+def _as_receiver(r) -> "DeltaReceiver":
+    """Remotes come in three shapes: a live receiver (RelayNode / reused
+    DeltaReceiver), a LayerStore, or a filesystem path."""
+    if isinstance(r, DeltaReceiver):
+        return r
+    return DeltaReceiver(r if isinstance(r, LayerStore) else
+                         LayerStore(str(r)))
+
+
+class RelayNode(DeltaReceiver):
+    """A relay tier: one store that is simultaneously a ``DeltaReceiver``
+    (pulls a delta from its parent) and a fan-out source (re-fans the SAME
+    negotiated plan to its children).
+
+    The parent's delta header seeds the child tier: ``negotiate`` answers
+    the parent with the relay's own have-set AND forwards the identical
+    O(#layers) request to every child, and ``probe_blobs`` re-uses the
+    parent's chunk probe list as the child probe — the relay never
+    re-derives negotiation from scratch, and every tier still pays exactly
+    one negotiation round. The union of the child answers splits into two
+    plans:
+
+    * **from-parent** blobs (the relay is missing them too): each one
+      arrives exactly once via ``receive_blob`` — content-address-verified
+      on receipt — and, with ``source="inflight"`` (the default), is
+      forwarded to every child missing it straight from the wire buffer:
+      zero local reads, zero relay-side re-hashing, bytes stream downstream
+      while the relay's own pull is still in flight. ``source="commit"``
+      defers the forward until the relay has committed (one local read per
+      blob, still never one per child).
+    * **serve-local** blobs (the relay already holds them — children
+      staler than the relay, or re-key/dedup twins): read from the relay's
+      store exactly ONCE each at fan time and broadcast to every child
+      that lacks them, no matter how many children there are.
+
+    Atomicity is tiered: children receive bytes early, but a child
+    ``commit`` only ever runs AFTER the relay's own commit succeeded —
+    a relay that fails (or dies) mid-pull leaves every child at its
+    previous tag with only orphan blobs behind, and a fleet-wide retry
+    converges through the normal orphan re-verification path. Child
+    failures are isolated per child (``fan.replicas``) and never poison
+    the relay's own pull. Children may themselves be ``RelayNode``s —
+    tiers nest arbitrarily deep.
+    """
+
+    def __init__(self, store, children: Sequence = (),
+                 source: str = "inflight"):
+        if source not in ("inflight", "commit"):
+            raise ValueError(f"source must be 'inflight' or 'commit', "
+                             f"got {source!r}")
+        if isinstance(children, (str, bytes)):
+            # a bare path would be iterated per CHARACTER, building one
+            # junk store per char — always a caller bug
+            raise TypeError("children must be a sequence of stores/paths/"
+                            f"receivers, not a bare path: {children!r}")
+        super().__init__(store if isinstance(store, LayerStore)
+                         else LayerStore(str(store)))
+        self.children: List[DeltaReceiver] = [_as_receiver(c)
+                                              for c in children]
+        self.source = source
+        self._relay_lock = threading.Lock()
+        self._begin_fan()
+
+    def begin_push(self) -> None:
+        super().begin_push()
+        # __init__ order: the first begin_push runs before children exist
+        if hasattr(self, "children"):
+            self._begin_fan()
+            for child in self.children:
+                child.begin_push()
+
+    def override_source(self, mode: str) -> None:
+        """Set THIS push's streaming mode for the whole subtree. The
+        node's configured ``source`` is untouched — a later push without
+        an override gets the configured mode back — and the override is
+        cleared by the next ``begin_push``."""
+        self._push_source = mode
+        for child in self.children:
+            if isinstance(child, RelayNode):
+                child.override_source(mode)
+
+    @property
+    def effective_source(self) -> str:
+        return self._push_source or self.source
+
+    def _begin_fan(self) -> None:
+        self._push_source: Optional[str] = None   # per-push mode override
+        self.fan = FanoutStats(
+            replicas=[ReplicaResult() for _ in self.children])
+        self._child_missing: List[List[str]] = [[] for _ in self.children]
+        # blob -> child indices. _inflight_want blobs arrive from the
+        # parent; _local_want blobs are served from the relay's own store.
+        self._inflight_want: Dict[str, Set[int]] = {}
+        self._local_want: Dict[str, Set[int]] = {}
+        self._forwarded: Set[str] = set()
+        self.inflight_blobs = 0      # unique blobs forwarded pre-commit
+        self.local_blob_reads = 0    # local store reads during the fan
+
+    def all_stores(self):
+        """Every store in this subtree (for batch-durability scoping)."""
+        yield self.store
+        for child in self.children:
+            if isinstance(child, RelayNode):
+                yield from child.all_stores()
+            else:
+                yield child.store
+
+    def _child_ok(self, i: int) -> bool:
+        return self.fan.replicas[i].error is None
+
+    def _fail_child(self, i: int, exc: BaseException) -> None:
+        with self._relay_lock:
+            if self.fan.replicas[i].error is None:
+                self.fan.replicas[i].error = f"{type(exc).__name__}: {exc}"
+                self.fan.replicas[i].exception = exc
+                self.fan.replicas[i].stats_partial = \
+                    self.children[i].stats
+
+    # ------------------------------------------------------------ negotiate
+    def negotiate(self, name: str,
+                  layer_meta: Dict[str, Tuple[str, str]]) -> HaveSet:
+        """Answer the parent with the relay's own have-set, then seed every
+        child with the SAME request. Child-missing layers whose content the
+        relay can already serve (committed here, or content-identical to a
+        committed re-key twin) get their chunk lists probed at the child
+        now — those blobs never need the parent."""
+        have = super().negotiate(name, layer_meta)
+        for i, child in enumerate(self.children):
+            try:
+                ch = child.negotiate(name, layer_meta)
+                child.stats.bytes_meta += ch.exchange_bytes
+                # the mutation gate, per child, before any byte moves
+                _gate_mutations(layer_meta, ch.held_checksums,
+                                "child replica")
+                self._child_missing[i] = list(ch.missing_layers)
+                servable: Set[str] = set()
+                for lid in ch.missing_layers:
+                    if lid in ch.rekey:
+                        continue      # child proves it holds the content
+                    if self._committed_layers and \
+                            lid in self._committed_layers and \
+                            self.store.has_layer(lid):
+                        src_lid = lid
+                    else:
+                        # relay re-keys lid to a committed twin: content
+                        # identical, so the twin's chunk list IS lid's
+                        src_lid = have.rekey.get(lid)
+                    if src_lid is None or not self.store.has_layer(src_lid):
+                        continue      # arrives from the parent instead
+                    for rec in self.store.read_layer(src_lid).records:
+                        servable.update(rec.chunks)
+                if servable:
+                    for h in child.probe_blobs(sorted(servable)):
+                        self._local_want.setdefault(h, set()).add(i)
+            except Exception as e:
+                self._fail_child(i, e)
+        return have
+
+    def probe_blobs(self, chunk_ids: Sequence[str]) -> Set[str]:
+        """The parent's probe list (chunks of relay-missing content
+        layers) doubles as the child probe — the delta header seeding the
+        child have-set union. A chunk a child lacks routes in-flight if the
+        parent is about to send it, serve-local if the relay already holds
+        it (cross-layer dedup)."""
+        missing = super().probe_blobs(chunk_ids)
+        for i, child in enumerate(self.children):
+            if not self._child_ok(i):
+                continue
+            try:
+                lacks = child.probe_blobs(chunk_ids)
+            except Exception as e:
+                self._fail_child(i, e)
+                continue
+            for h in lacks:
+                want = self._inflight_want if h in missing \
+                    else self._local_want
+                want.setdefault(h, set()).add(i)
+        return missing
+
+    # ------------------------------------------------------------- receive
+    def receive_blob(self, h: str, data: bytes) -> int:
+        """Verify + write locally (the relay's own single hash of the
+        byte), then — in-flight mode — forward the SAME wire buffer to
+        every child missing it: no local re-read, no relay-side re-hash;
+        each child runs its own verify-on-receipt."""
+        n = super().receive_blob(h, data)
+        if self.effective_source == "inflight" and h in self._inflight_want:
+            with self._relay_lock:
+                first = h not in self._forwarded
+                self._forwarded.add(h)
+                targets = [i for i in sorted(self._inflight_want[h])
+                           if self.fan.replicas[i].error is None]
+                if first and targets:
+                    self.inflight_blobs += 1
+            for i in targets:
+                try:
+                    self.children[i].receive_blob(h, data)
+                except Exception as e:
+                    self._fail_child(i, e)
+        return n
+
+    # -------------------------------------------------------------- commit
+    def commit(self, manifest: Manifest, config: ImageConfig) -> PushStats:
+        """The relay's own incremental verification + manifest rename
+        first; only then does the child tier finalize — a failed or killed
+        relay pull means no child ever commits."""
+        stats = super().commit(manifest, config)
+        self._fan_children(manifest, config)
+        return stats
+
+    def _layer_for(self, lid: str) -> LayerDescriptor:
+        received = self._received_layers.get(lid)
+        return received if received is not None else self.store.read_layer(lid)
+
+    def _fan_children(self, manifest: Manifest, config: ImageConfig) -> None:
+        t0 = time.perf_counter()
+        # blobs still owed to children: the serve-local plan plus any
+        # in-flight blobs not yet forwarded (source="commit", or a child
+        # plan learned after the blob passed through). Blob-major: ONE
+        # local read per blob, broadcast to every child that lacks it.
+        pending: Dict[str, Set[int]] = {}
+        for h, idxs in self._local_want.items():
+            pending.setdefault(h, set()).update(idxs)
+        for h, idxs in self._inflight_want.items():
+            if h not in self._forwarded:
+                pending.setdefault(h, set()).update(idxs)
+        for h in sorted(pending):
+            targets = [i for i in sorted(pending[h]) if self._child_ok(i)]
+            if not targets:
+                continue
+            try:
+                data = self.store.read_blob(h)
+            except OSError as e:
+                # a locally-unreadable blob (retention race, bad sector)
+                # fails only the children that needed THAT blob — the
+                # relay already committed and the other children proceed
+                for i in targets:
+                    self._fail_child(i, e)
+                continue
+            self.local_blob_reads += 1
+            for i in targets:
+                try:
+                    self.children[i].receive_blob(h, data)
+                except Exception as e:
+                    self._fail_child(i, e)
+
+        # image-wide totals for per-child dedup accounting (metadata only;
+        # every descriptor is local post-commit)
+        total_refs = total_payload = 0
+        for lid in manifest.layer_ids:
+            layer = self._layer_for(lid)
+            total_refs += sum(len(rec.chunks) for rec in layer.records)
+            total_payload += layer.nbytes
+
+        encoded: Dict[str, bytes] = {}   # descriptors encoded ONCE for all
+        for i, child in enumerate(self.children):
+            if not self._child_ok(i):
+                continue
+            try:
+                for lid in self._child_missing[i]:
+                    layer = self._layer_for(lid)
+                    if lid not in encoded:
+                        encoded[lid] = dumps(layer.to_json()).encode()
+                    child.receive_layer(layer, encoded=encoded[lid])
+                st = child.commit(manifest, config)
+                _stamp_dedup(st, total_refs, total_payload, t0)
+                self.fan.replicas[i].stats = st
+                if isinstance(child, RelayNode):
+                    self.fan.replicas[i].children = child.fan
+            except Exception as e:
+                self._fail_child(i, e)
+        self.fan.negotiation_rounds = max(
+            (c.negotiations for c in self.children), default=0)
+        self.fan.source_blob_reads = self.local_blob_reads
+        self.fan.blobs_broadcast = self.inflight_blobs + self.local_blob_reads
+        self.fan.wall_s = time.perf_counter() - t0
+
 
 def replicate_fanout(src: LayerStore, remotes: Sequence,
-                     name: str, tag: str) -> FanoutStats:
+                     name: str, tag: str,
+                     source: Optional[str] = None) -> FanoutStats:
     """Fan-out delta replication: push ``name:tag`` to N replicas with ONE
     negotiated have-set and ONE source read pass.
 
@@ -517,7 +859,21 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
       captured per replica (``ReplicaResult``); healthy replicas commit
       regardless, commits run concurrently so one straggler doesn't hold
       the rest, and a clean retry converges the failed ones.
+
+    ``remotes`` may mix stores/paths with ``RelayNode``s — a relay pulls
+    like any replica and re-fans the same plan to its own children
+    (``ReplicaResult.children`` nests the downstream outcome).
+    ``source="inflight"`` makes every relay stream received bytes to its
+    children while this pull is still in flight; ``source="commit"``
+    defers the re-fan until each relay commits; ``None`` keeps each
+    relay's own configured mode.
     """
+    if source not in (None, "inflight", "commit"):
+        raise ValueError(f"source must be 'inflight' or 'commit', "
+                         f"got {source!r}")
+    if isinstance(remotes, (str, bytes)):
+        raise TypeError("remotes must be a sequence of stores/paths/"
+                        f"receivers, not a bare path: {remotes!r}")
     t0 = time.perf_counter()
     problems = src.verify_image(name, tag, deep=False)   # once, not per N
     if problems:
@@ -530,10 +886,8 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
                      for rec in layer.records)
     total_payload = sum(layer.nbytes for layer in layers.values())
 
-    stores = [r if isinstance(r, LayerStore) else LayerStore(str(r))
-              for r in remotes]
-    receivers = [DeltaReceiver(s) for s in stores]
-    fan = FanoutStats(replicas=[ReplicaResult() for _ in stores])
+    receivers = [_as_receiver(r) for r in remotes]
+    fan = FanoutStats(replicas=[ReplicaResult() for _ in receivers])
     lock = threading.Lock()
 
     def fail(i: int, exc: BaseException) -> None:
@@ -543,20 +897,25 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
                 # kept with its traceback: push_delta re-raises it, and a
                 # transfer-failure frame pins at most ONE blob's bytes
                 fan.replicas[i].exception = exc
+                # what actually crossed the wire before the drop — never
+                # the waves that were skipped after it
+                fan.replicas[i].stats_partial = receivers[i].stats
 
     def alive(i: int) -> bool:
         return fan.replicas[i].error is None
 
     with contextlib.ExitStack() as stack:
-        for s in stores:
-            stack.enter_context(_BatchScope(s))
+        for recv in receivers:
+            for s in (recv.all_stores() if isinstance(recv, RelayNode)
+                      else (recv.store,)):
+                stack.enter_context(_BatchScope(s))
 
         # ---- ONE negotiation round: same request to every replica (the
         # independent exchanges run concurrently — each one scans its own
         # replica's metadata), the answers unioned into one plan
         # (blob -> replicas missing it). negotiation_rounds is MEASURED
         # from the receivers' exchange counters, not asserted.
-        missing_layers: List[List[str]] = [[] for _ in stores]
+        missing_layers: List[List[str]] = [[] for _ in receivers]
         plans: Dict[int, Set[str]] = {}
         want: Dict[str, List[int]] = {}
         pool = hash_pool()
@@ -564,15 +923,16 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
         def plan(i: int) -> None:
             try:
                 recv = receivers[i]
+                recv.begin_push()          # re-arm a reused receiver
+                if source is not None and isinstance(recv, RelayNode):
+                    # per-push override for the WHOLE subtree; cleared by
+                    # the next begin_push, so the node's configured mode
+                    # survives for later source=None pushes
+                    recv.override_source(source)
                 have = recv.negotiate(name, layer_meta)
                 recv.stats.bytes_meta += have.exchange_bytes
-                # the in-place-mutation gate, BEFORE any byte moves
-                for lid, remote_checksum in have.held_checksums.items():
-                    if layers[lid].checksum != remote_checksum:
-                        raise PushRejected(
-                            f"layer {lid}: remote holds a different "
-                            "checksum trace for this id (in-place mutation "
-                            "without a new id?)")
+                # the mutation gate, BEFORE any byte moves
+                _gate_mutations(layer_meta, have.held_checksums, "remote")
                 # blob set-difference: only new-content layers' chunks
                 need = sorted({h for lid in have.missing_layers
                                if lid not in have.rekey
@@ -583,11 +943,11 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
             except Exception as e:
                 fail(i, e)
 
-        if len(stores) > 1 and pool is not None:
-            for f in [pool.submit(plan, i) for i in range(len(stores))]:
+        if len(receivers) > 1 and pool is not None:
+            for f in [pool.submit(plan, i) for i in range(len(receivers))]:
                 f.result()
         else:
-            for i in range(len(stores)):
+            for i in range(len(receivers)):
                 plan(i)
         for i in sorted(plans):
             if not alive(i):
@@ -607,7 +967,6 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
         # not O(delta) — and never O(N x delta).
         hashes = sorted(h for h, targets in want.items()
                         if any(alive(i) for i in targets))
-        fan.blobs_broadcast = len(hashes)
 
         def receive(i: int, h: str, data: bytes) -> None:
             if not alive(i):
@@ -626,6 +985,7 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
             data = src.read_blob(h)
             with lock:
                 fan.source_blob_reads += 1
+                fan.blobs_broadcast += 1
             if pool is not None:
                 recv_futures.extend(pool.submit(receive, i, h, data)
                                     for i in targets[1:])
@@ -651,7 +1011,7 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
         # replicas), incremental verification, the manifest commit —
         # concurrent across replicas so a straggler only delays itself.
         encoded: Dict[str, bytes] = {}
-        for i in range(len(stores)):
+        for i in range(len(receivers)):
             if not alive(i):
                 continue
             for lid in missing_layers[i]:
@@ -663,12 +1023,10 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
             for lid in missing_layers[i]:
                 recv.receive_layer(layers[lid], encoded=encoded[lid])
             stats = recv.commit(manifest, config)
-            # dedup accounting from record metadata (no per-blob stats):
-            # everything the image references that did NOT cross the wire.
-            stats.blobs_dedup = total_refs - stats.blobs_sent
-            stats.bytes_deduped = total_payload - stats.bytes_payload
-            stats.wall_s = time.perf_counter() - t0
+            _stamp_dedup(stats, total_refs, total_payload, t0)
             fan.replicas[i].stats = stats
+            if isinstance(recv, RelayNode):
+                fan.replicas[i].children = recv.fan
 
         def safe_finalize(i: int) -> None:
             try:
@@ -676,7 +1034,7 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
             except Exception as e:
                 fail(i, e)
 
-        live = [i for i in range(len(stores)) if alive(i)]
+        live = [i for i in range(len(receivers)) if alive(i)]
         if len(live) > 1 and pool is not None:
             for f in [pool.submit(safe_finalize, i) for i in live]:
                 f.result()
@@ -727,18 +1085,55 @@ def export_delta(src: LayerStore, name: str, tag: str,
         blobs={h: src.read_blob(h) for h in sorted(chunks)}))
 
 
-def import_delta(dst: LayerStore, data: bytes) -> PushStats:
+def import_delta(dst, data: bytes) -> PushStats:
     """Apply an offline bundle through the same receive + incremental
     verification path a live push uses (decode already content-address-
     verified every payload; the receiver re-verifies on receipt anyway —
-    defense in depth, still only the new bytes)."""
+    defense in depth, still only the new bytes).
+
+    ``dst`` may be a LayerStore/path or a ``RelayNode`` — the offline form
+    of the relay topology: the bundle's header (``DeltaBundle.layer_meta``
+    + blob index) seeds the child negotiation exactly like a live parent's
+    delta header would, so one sneaker-netted bundle re-fans to a whole
+    edge tier with the usual one-read/one-forward accounting."""
     bundle = decode_delta(data)
-    receiver = DeltaReceiver(dst)
-    with _BatchScope(dst):
-        # index committed holdings up front so receive_layer's immutability
-        # gate and commit's twin checks apply exactly as on the live path
-        receiver._scan_committed(bundle.name)
-        receiver.rekey = dict(bundle.rekey)
+    receiver = _as_receiver(dst)
+    receiver.begin_push()                  # re-arm a reused receiver
+    with contextlib.ExitStack() as stack:
+        for s in (receiver.all_stores() if isinstance(receiver, RelayNode)
+                  else (receiver.store,)):
+            stack.enter_context(_BatchScope(s))
+        if isinstance(receiver, RelayNode):
+            # the negotiated path: scan committed holdings AND seed every
+            # child with the bundle header's layer metadata
+
+            def held(lid):
+                # a descriptor orphaned (possibly torn) by a crashed push
+                # must degrade to "unknown family", not crash the import
+                try:
+                    return receiver.store.read_layer(lid) \
+                        if receiver.store.has_layer(lid) else None
+                except (OSError, ValueError, KeyError):
+                    return None
+
+            meta = bundle.layer_meta(held=held)
+            receiver.negotiate(bundle.name, meta)
+            receiver.rekey = dict(bundle.rekey)
+            # probe the bundle's payload UNION the carried layers' full
+            # chunk lists: a child staler than the bundle's base may lack
+            # chunks the bundle doesn't carry but the relay already holds
+            # committed — exactly what a live parent's probe list covers
+            probe = set(bundle.blobs)
+            for layer in bundle.layers:
+                for rec in layer.records:
+                    probe.update(rec.chunks)
+            receiver.probe_blobs(sorted(probe))
+        else:
+            # index committed holdings up front so receive_layer's
+            # immutability gate and commit's twin checks apply exactly as
+            # on the live path
+            receiver._scan_committed(bundle.name)
+            receiver.rekey = dict(bundle.rekey)
         for h in sorted(bundle.blobs):
             receiver.receive_blob(h, bundle.blobs[h])
         for layer in bundle.layers:

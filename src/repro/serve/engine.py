@@ -17,18 +17,23 @@ tensors from the local store, and ``Engine.refresh(..., changed=...)``
 device-puts only those leaves into the live param tree — replica refresh
 cost is O(changed tensors), not O(model), and bit-identical to a full
 reload (tests prove it). A structural change (tensor added/removed, shape
-or dtype moved) falls back to the full reload automatically.
+or dtype moved) falls back to the full reload automatically. With
+``children=`` the follower doubles as a relay tier
+(``core.registry.RelayNode``): every pulled delta re-fans to the
+downstream edge stores through the same negotiated plan, streaming from
+the in-flight pull by default.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Iterable, Optional, Set
+from typing import Any, Iterable, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import LayerStore, PushStats, diff_tensor_records, pull_delta
+from ..core import (LayerStore, PushRejected, PushStats, RelayNode,
+                    diff_tensor_records, pull_delta, replicate_fanout)
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
 
@@ -217,22 +222,62 @@ class CheckpointFollower:
     mark-and-sweeps the rest after each pull, so a long-running replica's
     disk stays bounded (mirrors CheckpointManager._gc on the training
     side).
+
+    ``children`` turns this follower into a RELAY: each poll pulls the
+    delta once from the trainer and re-fans it to the downstream stores
+    (edge tier) through the same negotiated plan — streaming from the
+    in-flight pull by default (``source="inflight"``), with every child's
+    commit gated on the local commit. Child outcomes land in ``last_fan``
+    (per-child failure isolation; a sick edge never blocks this replica's
+    own refresh, and the next poll's re-fan converges it). Every child
+    store shares this follower's ``keep`` retention, so edge disks stay
+    bounded too.
+
+    Retention races are survived, not raised: a trainer that prunes the
+    tag mid-pull makes ``poll`` return None (the next poll sees a newer
+    tag), and a pruned-away base revision just downgrades the sparse plan
+    to a full update.
     """
 
     IMAGE = "ckpt"
 
     def __init__(self, remote, local, image: str = IMAGE, keep: int = 2,
-                 sparse: bool = True):
+                 sparse: bool = True, children: Sequence = (),
+                 source: str = "inflight"):
         self.remote = remote if isinstance(remote, LayerStore) \
             else LayerStore(str(remote))
         self.local = local if isinstance(local, LayerStore) \
             else LayerStore(str(local))
+        self.relay = RelayNode(self.local, children=children,
+                               source=source) if children else None
         self.image = image
         self.keep = keep
         self.sparse = sparse
         self.last_step: Optional[int] = None
         self.last_pull: Optional[PushStats] = None
         self.last_update: Optional[SparseUpdate] = None
+        self.last_fan = None          # child-tier FanoutStats (relay mode)
+
+    def _pull(self, tag: str) -> Optional[PushStats]:
+        """One delta pull (re-fanned to children in relay mode), hardened
+        against the retention race: if the trainer pruned ``tag`` between
+        ``latest_step`` and the pull, give up quietly — the next poll sees
+        a newer tag. Anything that fails while the remote still HAS the
+        tag is a real error and re-raises."""
+        try:
+            if self.relay is not None:
+                fan = replicate_fanout(self.remote, [self.relay],
+                                       self.image, tag)
+                rep = fan.replicas[0]
+                if rep.exception is not None:
+                    raise rep.exception
+                self.last_fan = rep.children
+                return rep.stats
+            return pull_delta(self.remote, self.local, self.image, tag)
+        except (OSError, PushRejected):
+            if self.remote.has_image(self.image, tag):
+                raise
+            return None
 
     def poll(self) -> Optional[SparseUpdate]:
         # lazy import: ckpt depends on core only, but keep serve->ckpt
@@ -245,7 +290,10 @@ class CheckpointFollower:
         if step is None or step == self.last_step:
             return None
         tag = f"step-{step:08d}"
-        self.last_pull = pull_delta(self.remote, self.local, self.image, tag)
+        pulled = self._pull(tag)
+        if pulled is None:           # tag pruned mid-pull: retry next poll
+            return None
+        self.last_pull = pulled
         # sparse plan BEFORE retention prunes the previous tag away
         changed: Optional[Set[str]] = None
         if self.sparse and self.last_step is not None:
@@ -256,7 +304,13 @@ class CheckpointFollower:
             self.image, tag, names=None if changed is None else changed)
         self.last_step = step
         # retention: drop superseded local checkpoints + sweep their blobs
+        # — at EVERY tier this follower feeds, or the edge stores would
+        # accumulate one committed step per poll forever
         prune_steps(self.local, self.image, self.keep)
+        if self.relay is not None:
+            for s in self.relay.all_stores():
+                if s is not self.local:
+                    prune_steps(s, self.image, self.keep)
         opt_flat = {k[len("opt/"):]: v for k, v in flat.items()
                     if k.startswith("opt/")}
         opt_flat.pop("__step__", None)

@@ -116,3 +116,45 @@ def test_fingerprint_mode_equivalent(tmp_path):
     p3, _, _ = mgr.restore()
     assert np.array_equal(np.asarray(p3["embed"]),
                           np.asarray(params2["embed"]))
+
+
+def test_mixed_tags_skipped_by_step_parsing(tmp_path):
+    """Regression: user-pushed tags (``best``, ``release``, ``step-final``,
+    a non-canonical ``step-9``) in the checkpoint image must be skipped by
+    step parsing — never crash ``latest_step``, never be mistaken for the
+    newest checkpoint, and never be deleted by retention."""
+    import dataclasses
+
+    from repro.ckpt.manager import latest_step, prune_steps, step_of_tag
+
+    assert step_of_tag("step-00000042") == 42
+    assert step_of_tag("step-123456789") == 123456789   # >8 digits grows
+    for bad in ("best", "release", "step-final", "step-9",
+                "step-000000009", "step--1", "step-"):
+        assert step_of_tag(bad) is None
+
+    params, opt = tiny_state(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), "tiny", policy(keep=2))
+    for s in range(3):
+        mgr.save(s, params, opt)
+    # pin user tags onto the image (e.g. a promoted "best" checkpoint)
+    m, c = mgr.store.read_image("ckpt", "step-00000002")
+    for tag in ("best", "step-final", "step-9"):
+        mgr.store.write_image(dataclasses.replace(m, tag=tag), c)
+
+    # parsing skips them ('step-9' would sort lexicographically AFTER
+    # 'step-00000002' — it must not shadow the real newest step)
+    assert latest_step(mgr.store, "ckpt", fresh=True) == 2
+    assert mgr.latest_step() == 2
+
+    # retention prunes only canonical step tags, keeps every pin
+    prune_steps(mgr.store, "ckpt", 1)
+    tags = set(mgr.store.list_tags("ckpt"))
+    assert tags == {"best", "step-final", "step-9", "step-00000002"}
+
+    # the save path keeps working with mixed tags present (it derives the
+    # parent revision via latest_step internally)
+    mgr.save(3, params, opt)
+    assert mgr.latest_step() == 3
+    p, _, s = mgr.restore()
+    assert s == 3

@@ -217,6 +217,138 @@ def test_fanout_mutation_gate_per_replica(tmp_path, rng):
     assert fresh.verify_image("app", "v1", deep=True) == []
 
 
+def test_fanout_midwave_dropout_accounting_exact(tmp_path, rng):
+    """A replica dying between _TRANSFER_BATCH waves must not inflate the
+    books: blobs whose only taker died are neither read nor counted
+    (``source_blob_reads == blobs_broadcast`` == the instrumented count),
+    the dead replica's ``stats_partial`` records ONLY the bytes that
+    actually reached it — never the waves that were skipped — and the
+    converging retry pays exactly the remainder."""
+    from repro.core.registry import _TRANSFER_BATCH
+    n_chunks = 3 * _TRANSFER_BATCH            # several waves of delta
+    store = mk(tmp_path, "src")
+    ins = [Instruction("FROM", "base", "config"),
+           Instruction("COPY", "src", "content"),
+           Instruction("CMD", "run", "config")]
+    payloads = {"src": {"w": rng.standard_normal(n_chunks * 128)
+                        .astype(np.float32)}}          # 128 f32 = 512 B
+    store.build_image("app", "v1", ins,
+                      {k: (lambda v=v: v) for k, v in payloads.items()})
+    current, lagging = mk(tmp_path, "cur"), mk(tmp_path, "lag")
+    push_delta(store, current, "app", "v1")
+
+    new = {"src": {"w": payloads["src"]["w"] + 1.0}}   # EVERY chunk moves
+    inject_payload_update(store, "app", "v1", "v2", new)
+    push_delta(store, current, "app", "v2")            # current needs 0
+
+    class Boom(RuntimeError):
+        pass
+
+    calls = {"n": 0}
+    orig_wb = lagging.write_blob
+
+    def dying_write_blob(h, data):
+        calls["n"] += 1
+        if calls["n"] > 3:                    # dies inside wave 1
+            raise Boom("replica lost mid-wave")
+        return orig_wb(h, data)
+
+    lagging.write_blob = dying_write_blob
+    counter = count_reads(store)
+    try:
+        fan = replicate_fanout(store, [current, lagging], "app", "v2")
+    finally:
+        del lagging.write_blob, store.read_blob
+    assert not fan.ok and fan.replicas[0].ok
+    dead = fan.replicas[1]
+    assert dead.stats is None                 # the PR-4 contract holds
+    # reads stayed exact: only blobs actually shipped were read — the
+    # waves after the drop were skipped entirely
+    assert fan.source_blob_reads == fan.blobs_broadcast == counter["n"]
+    assert counter["n"] < n_chunks
+    # partial accounting: exactly the blobs that landed before the drop,
+    # cross-checked against the replica's own store — never the skipped
+    # waves' bytes
+    landed = sum(1 for rec in store.read_layer(
+        store.read_image("app", "v2")[0].layer_ids[1]).records
+        for h in rec.chunks if lagging.has_blob(h))
+    assert dead.stats_partial is not None
+    assert dead.stats_partial.blobs_sent == landed < n_chunks
+    assert dead.stats_partial.bytes_payload == landed * 512
+
+    # the retry pays exactly the remainder: landed + retried == the delta
+    fan = replicate_fanout(store, [current, lagging], "app", "v2")
+    assert fan.ok
+    retried = fan.replicas[1].stats
+    assert retried.blobs_sent + landed == n_chunks
+    assert retried.bytes_payload == (n_chunks - landed) * 512
+    assert lagging.verify_image("app", "v2", deep=True) == []
+
+
+def test_follower_poll_survives_remote_prune_mid_poll(tmp_path, rng,
+                                                      monkeypatch):
+    """Retention race, remote side: the trainer prunes the tag between the
+    follower's ``latest_step`` and the pull. ``poll`` must return None
+    (not raise) and converge on the next poll."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    import repro.serve.engine as engine_mod
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512, keep=0))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"))
+    assert fol.poll().full
+    params2 = dict(params, w=params["w"] + 1.0)
+    mgr.save(1, params2, opt)
+
+    real = engine_mod.pull_delta
+
+    def racing_pull(remote, local, image, tag):
+        remote.remove_image(image, tag)       # the trainer's retention ran
+        remote.gc()
+        return real(remote, local, image, tag)
+
+    monkeypatch.setattr(engine_mod, "pull_delta", racing_pull)
+    assert fol.poll() is None                 # survived, no exception
+    monkeypatch.undo()
+    assert fol.last_step == 0                 # nothing was consumed
+
+    params3 = dict(params, w=params["w"] + 2.0)
+    mgr.save(2, params3, opt)                 # next poll converges
+    upd = fol.poll()
+    assert upd is not None and upd.step == 2
+    assert np.array_equal(np.asarray(upd.params["w"]), params3["w"])
+
+
+def test_follower_sparse_plan_survives_pruned_base_tag(tmp_path, rng):
+    """Retention race, local side: the follower's last-seen revision is
+    pruned out of its own store between polls. The sparse plan must
+    downgrade to a FULL update (diff_tensor_records has no base to plan
+    against) instead of raising."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"))
+    assert fol.poll().full
+    # a concurrent retention pass (another follower sharing the store, an
+    # operator prune) drops the base revision AND sweeps its layers
+    fol.local.remove_image("ckpt", f"step-{fol.last_step:08d}")
+    fol.local.gc()
+    params2 = dict(params, w=params["w"] + 1.0)
+    mgr.save(1, params2, opt)
+    upd = fol.poll()
+    assert upd is not None and upd.full       # downgraded, not raised
+    assert np.array_equal(np.asarray(upd.params["w"]), params2["w"])
+
+
 def test_fanout_source_verify_failure_raises(tmp_path, rng):
     store = mk(tmp_path, "src")
     payloads = make_payloads(rng)

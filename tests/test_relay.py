@@ -1,0 +1,726 @@
+"""Multi-hop relay replication (trainer -> relay -> edge tiers): the same
+negotiated plan re-fanned tier by tier, with exactly one parent read and at
+most one local read per blob regardless of fan-out width, in-flight
+streaming gated so a child never commits before its relay, per-child
+failure isolation with converging retries, SIGKILL atomicity one tier
+deeper than the fan-out tests, and the offline (bundle) relay form."""
+import collections
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core import (Instruction, LayerStore, PushRejected, RelayNode,
+                        export_delta, import_delta, inject_payload_update,
+                        push_delta, replicate_fanout)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "src", "content"),
+    Instruction("RUN", "deps", "content"),
+    Instruction("CMD", "run", "config"),
+]
+
+
+def mk(tmp_path, name):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+def make_payloads(rng):
+    return {
+        "src": {"a.py": rng.standard_normal(1000).astype(np.float32),
+                "b.py": rng.standard_normal(500).astype(np.float32)},
+        "deps": {"lib": rng.standard_normal(4000).astype(np.float32)},
+    }
+
+
+def build_v1(store, payloads):
+    prov = {k: (lambda v=v: v) for k, v in payloads.items()}
+    store.build_image("app", "v1", INS, prov)
+
+
+def inject_v2(store, payloads):
+    src2 = {k: v.copy() for k, v in payloads["src"].items()}
+    src2["b.py"][3] = 42.0                        # ONE changed 512 B chunk
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"deps": lambda: payloads["deps"]})
+    return src2
+
+
+def snapshot(store, name, tag):
+    manifest, config = store.read_image(name, tag)
+    layers, blobs = {}, {}
+    for lid in manifest.layer_ids:
+        with open(store._layer_path(lid), "rb") as f:
+            layers[lid] = f.read()
+        for rec in store.read_layer(lid).records:
+            for h in rec.chunks:
+                blobs[h] = store.read_blob(h)
+    return {"manifest": manifest.to_json(), "config": config.to_json(),
+            "layers": layers, "blobs": blobs}
+
+
+def count_reads(store):
+    """Shadow ``read_blob`` with a counting wrapper (independent proof of
+    the one-read-per-tier claims)."""
+    reads = []
+    orig = store.read_blob
+    store.read_blob = lambda h: (reads.append(h), orig(h))[1]
+    return reads
+
+
+# ----------------------------------------------------------------- topology
+def test_relay_bit_identical_to_push_delta(tmp_path, rng):
+    """trainer -> relay -> 2 edges: every tier ends bit-identical to a
+    direct push_delta of the same tag, for both the full image and the
+    one-chunk delta."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0"), mk(tmp_path, "e1")])
+    single = mk(tmp_path, "single")
+    for tag in ("v1", "v2"):
+        fan = replicate_fanout(store, [relay], "app", tag)
+        assert fan.ok and fan.deep_ok
+        assert fan.replicas[0].children is relay.fan
+        push_delta(store, single, "app", tag)
+        want = snapshot(single, "app", tag)
+        for s in relay.all_stores():
+            assert snapshot(s, "app", tag) == want
+            assert s.verify_image("app", tag, deep=True) == []
+
+
+def test_relay_inflight_one_parent_read_zero_local_reads(tmp_path, rng):
+    """Warm topology + one changed chunk: the relay reads the blob from
+    its parent exactly once, forwards it to both children straight from
+    the wire buffer (ZERO local reads), and every tier still pays exactly
+    one negotiation round. Per-hop wire stays O(changed bytes)."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0"), mk(tmp_path, "e1")],
+                      source="inflight")
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+    inject_v2(store, payloads)
+
+    parent_reads = count_reads(store)
+    local_reads = count_reads(relay.store)
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    del store.read_blob, relay.store.read_blob
+    assert fan.deep_ok
+    assert fan.negotiation_rounds == 1
+    assert relay.fan.negotiation_rounds == 1
+    assert len(parent_reads) == fan.source_blob_reads == 1
+    assert local_reads == [] and relay.local_blob_reads == 0
+    assert relay.inflight_blobs == 1
+    # per-hop wire: each hop carried the one changed chunk (+ metadata)
+    assert fan.replicas[0].stats.bytes_payload == 512
+    for rep in relay.fan.replicas:
+        assert rep.stats.bytes_payload == 512
+        assert rep.stats.bytes_sent == \
+            rep.stats.bytes_payload + rep.stats.bytes_meta
+
+
+def test_relay_commit_mode_defers_fan_single_local_read(tmp_path, rng):
+    """source="commit": nothing is forwarded until the relay committed;
+    the owed blob is then read from the relay's store exactly once and
+    broadcast to both children."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0"), mk(tmp_path, "e1")],
+                      source="commit")
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+    inject_v2(store, payloads)
+
+    events = []
+    for label, s in (("relay", relay.store),
+                     ("e0", relay.children[0].store),
+                     ("e1", relay.children[1].store)):
+        orig = s.write_image
+
+        def hook(manifest, config, _orig=orig, _label=label):
+            events.append(f"commit:{_label}")
+            return _orig(manifest, config)
+        s.write_image = hook
+    for i in (0, 1):
+        s = relay.children[i].store
+        orig_wb = s.write_blob
+
+        def hook_b(h, data, _orig=orig_wb, _i=i):
+            events.append(f"blob:e{_i}")
+            return _orig(h, data)
+        s.write_blob = hook_b
+    try:
+        fan = replicate_fanout(store, [relay], "app", "v2")
+    finally:
+        for s in [relay.store] + [c.store for c in relay.children]:
+            s.__dict__.pop("write_image", None)
+            s.__dict__.pop("write_blob", None)
+    assert fan.deep_ok
+    assert relay.inflight_blobs == 0
+    assert relay.local_blob_reads == 1          # once, not once per child
+    # the relay committed BEFORE any child saw a byte, and both children
+    # committed after receiving
+    assert events.index("commit:relay") < events.index("blob:e0")
+    assert events.index("blob:e0") < events.index("commit:e0")
+    assert events.index("blob:e1") < events.index("commit:e1")
+
+
+def test_relay_inflight_child_commit_gated_on_relay_commit(tmp_path, rng):
+    """In-flight mode streams bytes to children BEFORE the relay commits,
+    but a child commit still only happens after the relay's."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0")], source="inflight")
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+    inject_v2(store, payloads)
+
+    events = []
+    child_store = relay.children[0].store
+    orig_ci = child_store.write_image
+    orig_cb = child_store.write_blob
+    orig_ri = relay.store.write_image
+    child_store.write_image = lambda m, c: (events.append("child_commit"),
+                                            orig_ci(m, c))[1]
+    child_store.write_blob = lambda h, d: (events.append("child_blob"),
+                                           orig_cb(h, d))[1]
+    relay.store.write_image = lambda m, c: (events.append("relay_commit"),
+                                            orig_ri(m, c))[1]
+    try:
+        fan = replicate_fanout(store, [relay], "app", "v2")
+    finally:
+        for s in (child_store, relay.store):
+            s.__dict__.pop("write_image", None)
+            s.__dict__.pop("write_blob", None)
+    assert fan.deep_ok
+    # streamed in flight: the child had the byte before the relay's commit
+    assert events.index("child_blob") < events.index("relay_commit")
+    assert events.index("relay_commit") < events.index("child_commit")
+
+
+def test_relay_stale_children_one_local_read_per_blob(tmp_path, rng):
+    """Children lagging behind an up-to-date relay: every blob the child
+    tier lacks is read from the relay's store exactly ONCE and broadcast
+    to all three children — never re-read or re-hashed per child."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    hot = mk(tmp_path, "hot")
+    push_delta(store, hot, "app", "v2")           # relay already current
+    relay = RelayNode(hot, children=[mk(tmp_path, f"s{i}")
+                                     for i in range(3)])
+    local_reads = count_reads(hot)
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    del hot.read_blob
+    assert fan.deep_ok
+    assert fan.replicas[0].stats.bytes_payload == 0     # parent sent nothing
+    counts = collections.Counter(local_reads)
+    assert relay.local_blob_reads == len(counts)
+    assert counts and max(counts.values()) == 1         # once per blob
+    for child in relay.children:
+        assert child.store.verify_image("app", "v2", deep=True) == []
+
+
+def test_relay_mixed_staleness_children(tmp_path, rng):
+    """Children at different states behind one relay: one warm (delta
+    only), one cold (everything), one current (nothing) — each child's
+    wire is O(what THAT child lacked), carved from one relay plan."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    warm, cold, done = (mk(tmp_path, n) for n in ("warm", "cold", "done"))
+    push_delta(store, warm, "app", "v1")
+    push_delta(store, done, "app", "v2")
+    relay = RelayNode(mk(tmp_path, "relay"), children=[warm, cold, done])
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    assert fan.deep_ok
+    s_warm, s_cold, s_done = (r.stats for r in relay.fan.replicas)
+    assert s_warm.blobs_sent == 1 and s_warm.bytes_payload == 512
+    assert s_cold.blobs_sent > 1
+    assert s_done.blobs_sent == 0 and s_done.layers_dedup > 0
+    assert s_warm.bytes_sent < s_cold.bytes_sent / 2
+    for child in relay.children:
+        assert child.store.verify_image("app", "v2", deep=True) == []
+
+
+def test_nested_relay_three_tiers(tmp_path, rng):
+    """trainer -> relay -> sub-relay -> edge: tiers nest; every store ends
+    deep-verified and the edge payload is bit-identical to the trainer."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    src2 = inject_v2(store, payloads)
+    sub = RelayNode(mk(tmp_path, "sub"), children=[mk(tmp_path, "edge")])
+    relay = RelayNode(mk(tmp_path, "relay"), children=[sub])
+    fan = replicate_fanout(store, [relay], "app", "v2", source="inflight")
+    assert fan.deep_ok
+    assert fan.replicas[0].children.replicas[0].children is sub.fan
+    edge = mk(tmp_path, "edge")
+    assert edge.verify_image("app", "v2", deep=True) == []
+    flat = edge.load_image_payload("app", "v2")
+    assert np.array_equal(flat["b.py"], src2["b.py"])
+    assert np.array_equal(flat["lib"], payloads["deps"]["lib"])
+
+
+# ------------------------------------------------------- failure isolation
+def test_relay_child_failure_isolated_and_retry_converges(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0"), mk(tmp_path, "e1")])
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+    inject_v2(store, payloads)
+
+    class Boom(RuntimeError):
+        pass
+
+    def dying(layer, encoded=None):
+        raise Boom("edge disk full")
+
+    relay.children[0].store.write_layer = dying
+    try:
+        fan = replicate_fanout(store, [relay], "app", "v2")
+    finally:
+        del relay.children[0].store.write_layer
+    # the relay itself committed; only the sick child is isolated
+    assert fan.ok and not fan.deep_ok
+    assert relay.store.verify_image("app", "v2", deep=True) == []
+    assert relay.fan.replicas[0].error is not None
+    assert isinstance(relay.fan.replicas[0].exception, Boom)
+    assert relay.fan.replicas[0].stats is None
+    assert relay.fan.replicas[1].ok
+    assert relay.children[1].store.verify_image("app", "v2", deep=True) == []
+    # the failed child kept its previous tag fully intact
+    assert relay.children[0].store.list_tags("app") == ["v1"]
+    assert relay.children[0].store.verify_image("app", "v1", deep=True) == []
+
+    # retry converges the whole topology; healthy tiers resend nothing
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    assert fan.deep_ok
+    assert fan.replicas[0].stats.bytes_payload == 0
+    assert relay.fan.replicas[1].stats.bytes_payload == 0
+    assert relay.children[0].store.verify_image("app", "v2", deep=True) == []
+
+
+def test_relay_failure_means_no_child_commits(tmp_path, rng):
+    """A relay whose own commit fails must leave EVERY child at its
+    previous tag even though in-flight bytes already reached them — the
+    child commit is gated on the relay commit."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0"), mk(tmp_path, "e1")],
+                      source="inflight")
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+    inject_v2(store, payloads)
+
+    class Boom(RuntimeError):
+        pass
+
+    def dying_write_image(manifest, config):
+        raise Boom("relay commit lost")
+
+    relay.store.write_image = dying_write_image
+    try:
+        fan = replicate_fanout(store, [relay], "app", "v2")
+    finally:
+        del relay.store.write_image
+    assert not fan.ok
+    assert isinstance(fan.replicas[0].exception, Boom)
+    # in-flight bytes may have landed as orphans, but no tier committed
+    for s in relay.all_stores():
+        assert s.list_tags("app") == ["v1"]
+        assert s.verify_image("app", "v1", deep=True) == []
+    # retry converges every tier (orphans re-verified, never trusted)
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    assert fan.deep_ok
+    for s in relay.all_stores():
+        assert s.verify_image("app", "v2", deep=True) == []
+
+
+def test_relay_child_mutation_gate(tmp_path, rng):
+    """A child holding a diverged checksum for a layer id is rejected at
+    the child tier's negotiation gate, before any byte reaches it, while
+    its sibling and the relay proceed."""
+    import dataclasses
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    bad, good = mk(tmp_path, "bad"), mk(tmp_path, "good")
+    push_delta(store, bad, "app", "v1")
+    m, _ = bad.read_image("app", "v1")
+    layer = bad.read_layer(m.layer_ids[1], use_cache=False)
+    bad.write_layer(dataclasses.replace(layer, checksum="deadbeef" * 8))
+    bad._layer_cache.clear()
+    before = bad.read_layer(m.layer_ids[1], use_cache=False).checksum
+
+    # re-fan the SAME tag: the bad child now holds one of its layer ids
+    # with a diverged checksum — the paper's in-place mutation signature
+    relay = RelayNode(mk(tmp_path, "relay"), children=[bad, good])
+    fan = replicate_fanout(store, [relay], "app", "v1")
+    assert fan.ok and not fan.deep_ok
+    assert isinstance(relay.fan.replicas[0].exception, PushRejected)
+    assert relay.fan.replicas[0].stats is None
+    assert relay.fan.replicas[1].ok
+    assert good.verify_image("app", "v1", deep=True) == []
+    # no byte reached the rejected child (its tampered state is untouched)
+    assert bad.read_layer(m.layer_ids[1],
+                          use_cache=False).checksum == before
+
+
+def test_source_override_is_per_push_and_reaches_nested_tiers(tmp_path,
+                                                              rng):
+    """``replicate_fanout(source=...)`` must re-mode the WHOLE subtree for
+    that push only: a nested relay obeys the override, and the node's
+    configured mode comes back for the next source=None push."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    sub = RelayNode(mk(tmp_path, "sub"), children=[mk(tmp_path, "edge")],
+                    source="inflight")
+    relay = RelayNode(mk(tmp_path, "relay"), children=[sub],
+                      source="inflight")
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+    inject_v2(store, payloads)
+
+    # override to commit-gated ordering: NO tier may stream pre-commit
+    fan = replicate_fanout(store, [relay], "app", "v2", source="commit")
+    assert fan.deep_ok
+    assert relay.inflight_blobs == 0 and relay.local_blob_reads == 1
+    assert sub.inflight_blobs == 0 and sub.local_blob_reads == 1
+    # the configured mode survives the override
+    assert relay.source == "inflight" and sub.source == "inflight"
+
+    # next push without an override streams in-flight again (both tiers)
+    src3 = {k: v.copy() for k, v in payloads["src"].items()}
+    src3["a.py"][1] = -3.0
+    inject_payload_update(store, "app", "v2", "v3", {"src": src3},
+                          providers={"deps": lambda: payloads["deps"]})
+    fan = replicate_fanout(store, [relay], "app", "v3")
+    assert fan.deep_ok
+    assert relay.inflight_blobs == 1 and relay.local_blob_reads == 0
+    assert sub.inflight_blobs == 1 and sub.local_blob_reads == 0
+
+
+def test_unreadable_local_blob_fails_only_its_takers(tmp_path, rng):
+    """A serve-local blob the relay can no longer read (retention race,
+    bad sector) must fail ONLY the children that needed it — the relay's
+    own already-landed commit stays good, and healing the store converges
+    the children on retry."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2(store, payloads)
+    hot = mk(tmp_path, "hot")
+    push_delta(store, hot, "app", "v2")
+    relay = RelayNode(hot, children=[mk(tmp_path, "c0"), mk(tmp_path, "c1")])
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+
+    # the one blob the children lack for v2 disappears from the relay
+    m2, _ = store.read_image("app", "v2")
+    m1, _ = store.read_image("app", "v1")
+    old = {h for lid in m1.layer_ids
+           for rec in store.read_layer(lid).records for h in rec.chunks}
+    (owed,) = {h for lid in m2.layer_ids
+               for rec in store.read_layer(lid).records
+               for h in rec.chunks} - old
+    os.remove(hot._blob_path(owed))
+
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    assert fan.ok                    # the relay tier itself is healthy
+    assert not fan.deep_ok
+    assert hot.verify_image("app", "v2", deep=False) == []
+    for i in (0, 1):                 # both children needed the lost blob
+        assert not relay.fan.replicas[i].ok
+        assert relay.children[i].store.list_tags("app") == ["v1"]
+
+    # heal the relay store; the retry converges every child
+    hot.write_blob(owed, store.read_blob(owed))
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    assert fan.deep_ok
+    for child in relay.children:
+        assert child.store.verify_image("app", "v2", deep=True) == []
+
+
+# -------------------------------------------------------------- SIGKILL
+def _run_kill9(tmp_path, script_body):
+    root = str(tmp_path)
+    script = textwrap.dedent(f"""
+        import os, signal
+        import numpy as np
+        from repro.core import (Instruction, LayerStore, RelayNode,
+                                inject_payload_update, replicate_fanout)
+
+        ins = [Instruction("FROM", "base", "config"),
+               Instruction("COPY", "src", "content"),
+               Instruction("CMD", "run", "config")]
+        payloads = {{"src": {{"w": np.arange(2000, dtype=np.float32)}}}}
+        root = {root!r}
+        store = LayerStore(os.path.join(root, "src"), chunk_bytes=256)
+        prov = {{k: (lambda v=v: v) for k, v in payloads.items()}}
+        store.build_image("app", "v1", ins, prov)
+        relay = RelayNode(LayerStore(os.path.join(root, "relay"),
+                                     chunk_bytes=256),
+                          children=[LayerStore(os.path.join(root, f"e{{i}}"),
+                                               chunk_bytes=256)
+                                    for i in range(2)])
+        assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+        new = {{"src": {{"w": payloads["src"]["w"] + 1.0}}}}
+        inject_payload_update(store, "app", "v1", "v2", new)
+        print("READY", flush=True)
+    """) + textwrap.dedent(script_body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env, timeout=120)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert "READY" in r.stdout
+    assert "UNREACHABLE" not in r.stdout
+    return root
+
+
+def _assert_tiers_consistent_and_retry(tmp_path):
+    """Every tier is fully at v1 or fully at v2 — never torn — and a
+    fleet-wide retry converges the whole topology."""
+    root = str(tmp_path)
+    store = LayerStore(os.path.join(root, "src"), chunk_bytes=256)
+    relay = RelayNode(LayerStore(os.path.join(root, "relay"),
+                                 chunk_bytes=256),
+                      children=[LayerStore(os.path.join(root, f"e{i}"),
+                                           chunk_bytes=256)
+                                for i in range(2)])
+    for s in relay.all_stores():
+        tags = s.list_tags("app")
+        assert "v1" in tags and set(tags) <= {"v1", "v2"}
+        for tag in tags:
+            assert s.verify_image("app", tag, deep=True) == []
+    fan = replicate_fanout(store, [relay], "app", "v2")
+    assert fan.deep_ok
+    for s in relay.all_stores():
+        assert s.verify_image("app", "v2", deep=True) == []
+
+
+def test_relay_kill9_mid_pull_leaves_no_torn_tier(tmp_path):
+    """SIGKILL inside the relay's own commit (blobs already landed at the
+    relay AND streamed in-flight to the children): no tier may commit, no
+    tier may tear, retry converges."""
+    _run_kill9(tmp_path, """
+        def dying_write_image(manifest, config):
+            os.kill(os.getpid(), signal.SIGKILL)
+        relay.store.write_image = dying_write_image
+        replicate_fanout(store, [relay], "app", "v2", source="inflight")
+        print("UNREACHABLE", flush=True)
+    """)
+    _assert_tiers_consistent_and_retry(tmp_path)
+
+
+def test_relay_kill9_mid_refan_leaves_no_torn_tier(tmp_path):
+    """SIGKILL one tier deeper — inside a child's commit, after the relay
+    committed: the relay is at v2, the dying child must stay fully at v1,
+    and the fleet retry converges everyone."""
+    _run_kill9(tmp_path, """
+        def dying_write_image(manifest, config):
+            os.kill(os.getpid(), signal.SIGKILL)
+        relay.children[1].store.write_image = dying_write_image
+        replicate_fanout(store, [relay], "app", "v2", source="inflight")
+        print("UNREACHABLE", flush=True)
+    """)
+    # the relay committed before the child died
+    root = str(tmp_path)
+    relay_store = LayerStore(os.path.join(root, "relay"), chunk_bytes=256)
+    assert set(relay_store.list_tags("app")) == {"v1", "v2"}
+    _assert_tiers_consistent_and_retry(tmp_path)
+
+
+# ---------------------------------------------------------- integrations
+def test_manager_replicate_relay_topology(tmp_path, rng):
+    """CheckpointManager.replicate(relay=...): plain remotes and relay
+    tiers ride one fan-out; every edge ends bit-identical to the save."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fan = mgr.replicate(
+        remote=[str(tmp_path / "plain")],
+        relay={str(tmp_path / "r0"): [str(tmp_path / "e0"),
+                                      str(tmp_path / "e1")]},
+        source="inflight")
+    assert fan.deep_ok and len(fan.replicas) == 2
+    assert fan.replicas[0].children is None          # the plain remote
+    assert fan.replicas[1].children is not None
+    for name in ("plain", "r0", "e0", "e1"):
+        s = LayerStore(str(tmp_path / name))
+        assert s.verify_image("ckpt", "step-00000000", deep=True) == []
+        flat = s.load_image_payload("ckpt", "step-00000000")
+        assert np.array_equal(flat["params/w"], params["w"])
+
+    # nested dict children build intermediate tiers, not junk leaf stores
+    fan = mgr.replicate(relay={str(tmp_path / "n0"):
+                               [{str(tmp_path / "n1"):
+                                 [str(tmp_path / "n_edge")]}]})
+    assert fan.deep_ok
+    for name in ("n0", "n1", "n_edge"):
+        assert LayerStore(str(tmp_path / name)).verify_image(
+            "ckpt", "step-00000000", deep=True) == []
+
+    # argument validation: a destination is required, and source= without
+    # any relay in reach is a caller error, not a silent no-op
+    try:
+        mgr.replicate()
+        raise AssertionError("no-destination replicate must raise")
+    except ValueError:
+        pass
+    try:
+        mgr.replicate(remote=str(tmp_path / "plain"), source="commit")
+        raise AssertionError("source= on a plain remote must raise")
+    except ValueError:
+        pass
+
+
+def test_follower_children_refan(tmp_path, rng):
+    """CheckpointFollower(children=...): each poll pulls once from the
+    trainer and re-fans to the edge stores; edge payloads stay
+    bit-identical to the trainer across sparse polls."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    params = {"w": rng.standard_normal(600).astype(np.float32),
+              "b": rng.standard_normal(300).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"),
+                             children=[str(tmp_path / "e0"),
+                                       str(tmp_path / "e1")])
+    upd = fol.poll()
+    assert upd is not None and upd.full
+    assert fol.last_fan is not None and fol.last_fan.ok
+
+    params2 = dict(params)
+    params2["w"] = params["w"].copy()
+    params2["w"][5] += 1.0
+    mgr.save(1, params2, opt)
+    upd = fol.poll()
+    assert upd.changed_params == {"w"}
+    assert fol.last_fan.ok
+    for name in ("e0", "e1"):
+        s = LayerStore(str(tmp_path / name))
+        assert s.verify_image("ckpt", "step-00000001", deep=True) == []
+        flat = s.load_image_payload("ckpt", "step-00000001")
+        assert np.array_equal(flat["params/w"], params2["w"])
+        assert np.array_equal(flat["params/b"], params["b"])
+
+
+def test_import_delta_serves_stale_child_from_relay_holdings(tmp_path,
+                                                             rng):
+    """Offline relay with a child STALER than the bundle's base: chunks
+    the bundle doesn't carry (they changed in an earlier hop) but the
+    relay holds committed must be served locally — the first import must
+    converge the child, not fail its commit."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    src2 = inject_v2(store, payloads)                 # v1 -> v2
+    src3 = {k: v.copy() for k, v in src2.items()}
+    src3["b.py"][7] = -7.0                            # v2 -> v3
+    inject_payload_update(store, "app", "v2", "v3", {"src": src3},
+                          providers={"deps": lambda: payloads["deps"]})
+
+    child = mk(tmp_path, "child")
+    push_delta(store, child, "app", "v1")             # child at v1 (stale)
+    relay_store = mk(tmp_path, "relay")
+    push_delta(store, relay_store, "app", "v2")       # relay at v2
+    relay = RelayNode(relay_store, children=[child])
+
+    # bundle carries ONLY the v2->v3 delta; the child also lacks v1->v2
+    bundle = export_delta(store, "app", "v3", base_tag="v2")
+    import_delta(relay, bundle)
+    assert relay.fan.ok, [r.error for r in relay.fan.replicas]
+    assert child.verify_image("app", "v3", deep=True) == []
+    assert np.array_equal(child.load_image_payload("app", "v3")["b.py"],
+                          src3["b.py"])
+
+
+def test_follower_relay_prunes_edge_tier(tmp_path, rng):
+    """Edge stores share the follower's retention: polling many steps must
+    not grow the edge tier beyond ``keep`` checkpoints."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"), keep=2,
+                             children=[str(tmp_path / "e0")])
+    for s in range(5):
+        params = dict(params, w=params["w"] + 1.0)
+        mgr.save(s, params, opt)
+        assert fol.poll() is not None
+    edge = LayerStore(str(tmp_path / "e0"))
+    tags = edge.list_tags("ckpt")
+    assert tags == ["step-00000003", "step-00000004"]
+    for tag in tags:
+        assert edge.verify_image("ckpt", tag, deep=True) == []
+
+
+def test_negotiations_counter_measures_extra_rounds(tmp_path, rng):
+    """``negotiations`` must count across a whole push (reset only at
+    ``begin_push``), so FanoutStats.negotiation_rounds can actually
+    detect a second round instead of tautologically reading 1."""
+    from repro.core import DeltaReceiver
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    m, _ = store.read_image("app", "v1")
+    meta = {lid: (store.read_layer(lid).family,
+                  store.read_layer(lid).checksum) for lid in m.layer_ids}
+    recv = DeltaReceiver(mk(tmp_path, "dst"))
+    recv.begin_push()
+    recv.negotiate("app", meta)
+    recv.negotiate("app", meta)               # a hypothetical second round
+    assert recv.negotiations == 2             # measured, not erased
+    recv.begin_push()
+    assert recv.negotiations == 0
+
+
+def test_import_delta_refans_offline_bundle(tmp_path, rng):
+    """The offline relay: one exported bundle applied at a RelayNode lands
+    on the relay AND its children through the same negotiated machinery,
+    with the bundle header seeding the child plans."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    src2 = inject_v2(store, payloads)
+    relay = RelayNode(mk(tmp_path, "relay"),
+                      children=[mk(tmp_path, "e0"), mk(tmp_path, "e1")])
+    assert replicate_fanout(store, [relay], "app", "v1").deep_ok
+
+    bundle = export_delta(store, "app", "v2", base_tag="v1")
+    stats = import_delta(relay, bundle)
+    assert stats.bytes_payload == 512            # only the changed chunk
+    assert relay.fan.ok
+    for s in relay.all_stores():
+        assert s.verify_image("app", "v2", deep=True) == []
+        assert np.array_equal(s.load_image_payload("app", "v2")["b.py"],
+                              src2["b.py"])
