@@ -136,13 +136,24 @@ def prune_steps(store: LayerStore, image: str, keep: int) -> bool:
     Ordering is NUMERIC on the parsed step, and non-canonical tags
     (``best``, ``release``, ``step-final``, a hand-pushed ``step-9``) are
     never candidates — retention must not be able to delete a user's
-    pin, and must never mistake one for the newest checkpoint."""
+    pin, and must never mistake one for the newest checkpoint.
+
+    Tags under an active retention LEASE (a relay pinning the base a
+    lagging child's delta still negotiates against — see
+    ``LayerStore.acquire_lease``) are skipped, not deleted: retention on
+    a relay must never pull the base out from under an in-flight child
+    pull. The skip is tag-granular and temporary — once the child commits
+    (release) or dies (TTL expiry), the next prune cycle reclaims it."""
     if keep <= 0:
         return False
     steps = sorted((s, t) for t in store.list_tags(image)
                    if (s := step_of_tag(t)) is not None)
     removed = False
     for _, t in steps[:-keep]:
+        # remove_image refuses leased tags on its own; checking here too
+        # keeps the gc() decision honest (a fully-leased prune is a no-op)
+        if store.leased(image, t):
+            continue
         removed = store.remove_image(image, t) or removed
     if removed:
         store.gc()

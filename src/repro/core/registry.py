@@ -61,6 +61,8 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..ft.faults import fault_point
+from ..ft.retry import RetryHealth, RetryPolicy
 from .chunker import hash_pool, sha256_hex
 from .delta import DeltaBundle, decode_delta, encode_delta
 from .diff import diff_manifests
@@ -200,9 +202,16 @@ class _BatchScope:
         self.store.durability = "batch"
         return self
 
-    def __exit__(self, *exc):
-        # write_image (the commit) already flushed deferred fsyncs; on the
-        # error path the dirty sets simply stay pending for the next commit.
+    def __exit__(self, exc_type, exc, tb):
+        # write_image (the commit) already flushed deferred fsyncs, so this
+        # is a no-op after a committed push. After a FAILED one (exception
+        # here, or a per-replica failure captured by the fan-out) the
+        # push's blobs are on disk but un-fsynced — and a later push's
+        # ``probe_blobs`` orphan re-hash would ADOPT them as verified
+        # without ever scheduling the fsync it skipped. Flush them before
+        # leaving the scope: a crash-mid-batch must never leave bytes that
+        # look adoptable but were never made durable.
+        self.store.sync_for_commit()
         self.store.durability = self._prev
         return False
 
@@ -303,6 +312,7 @@ class DeltaReceiver:
         re-received and re-verified rather than trusted.
         """
         have = HaveSet()
+        fault_point("wire.negotiate", self.store.root)
         self.negotiations += 1
         by_family = self._scan_committed(name)
 
@@ -340,6 +350,7 @@ class DeltaReceiver:
         ones are deleted (unreferenced, so safe) and reported missing so
         the pusher resends them. Either way a retry after a crash
         converges; the cost is O(orphaned chunks), zero on a clean store."""
+        fault_point("wire.probe_blobs", self.store.root)
         missing: Set[str] = set()
         for h in chunk_ids:
             if h in self._known_chunks or h in self._verified_blobs:
@@ -350,6 +361,9 @@ class DeltaReceiver:
             if sha256_hex(self.store.read_blob(h)) == h:
                 self._verified_blobs.add(h)
                 self.stats.blobs_hashed_remote += 1
+                # adoption must re-arm the fsync the crashed writer never
+                # issued — intact-on-read does not mean durable-on-disk
+                self.store.ensure_blob_durable(h)
             else:
                 self.store.drop_blob(h)      # torn orphan: resend
                 missing.add(h)
@@ -366,6 +380,8 @@ class DeltaReceiver:
         safe as the negotiated one); an identical re-send is a no-op.
         ``encoded`` lets a fan-out source serialize each descriptor once
         for every replica (must be ``dumps(layer.to_json())``)."""
+        fault_point("wire.receive_layer",
+                    f"{self.store.root}:{layer.layer_id}")
         if self._committed_layers is not None and \
                 layer.layer_id in self._committed_layers and \
                 self.store.has_layer(layer.layer_id):
@@ -387,6 +403,8 @@ class DeltaReceiver:
     def receive_blob(self, h: str, data: bytes) -> int:
         """Content-address verification happens HERE, overlapped with the
         transfer — the only time a pushed byte is ever hashed remotely."""
+        data = fault_point("wire.receive_blob",
+                           f"{self.store.root}:{h}", data)
         if sha256_hex(data) != h:
             raise PushRejected(f"blob {h[:12]}: payload does not match its "
                                "content address (corrupt transfer)")
@@ -411,6 +429,7 @@ class DeltaReceiver:
             return False
         self._verified_blobs.add(h)
         self.stats.blobs_hashed_remote += 1
+        self.store.ensure_blob_durable(h)    # adopted orphan: re-arm fsync
         return True
 
     # -------------------------------------------------------------- commit
@@ -434,6 +453,7 @@ class DeltaReceiver:
           is independently recomputed at the remote.
         """
         stats = self.stats
+        fault_point("wire.commit", self.store.root)
         if self._committed_layers is None:       # offline path: no negotiate
             self._scan_committed(manifest.name)
         parent_chain: Optional[str] = None
@@ -513,7 +533,12 @@ class ReplicaResult:
     ``stats`` is only set for replicas that COMMITTED. A replica that
     failed mid-push still reports what actually crossed the wire before it
     dropped out in ``stats_partial`` — bytes of waves never sent to it are
-    never counted anywhere. ``children`` nests the downstream tier's
+    never counted anywhere; a within-run retry (``retry=`` on
+    ``replicate_fanout``) that later converges it sets ``stats`` to the
+    SUCCESSFUL attempt's books while ``stats_partial`` keeps the first
+    failure's, so "the retry paid only the remainder" is checkable.
+    ``health`` records the retry loop's outcome (attempts, backoff,
+    quarantine) whenever one ran. ``children`` nests the downstream tier's
     outcome when this replica is a ``RelayNode``."""
 
     stats: Optional[PushStats] = None
@@ -521,6 +546,7 @@ class ReplicaResult:
     exception: Optional[BaseException] = None
     stats_partial: Optional[PushStats] = None
     children: Optional["FanoutStats"] = None
+    health: Optional[RetryHealth] = None
 
     @property
     def ok(self) -> bool:
@@ -544,6 +570,13 @@ class FanoutStats:
     # counted — source_blob_reads == blobs_broadcast stays exact.
     blobs_broadcast: int = 0
     wall_s: float = 0.0
+    # Self-healing accounting (retry= passed): replica indices that
+    # exhausted their attempts this run (their ReplicaResult.health holds
+    # the structured record), and the total extra attempts spent across
+    # the fleet. A quarantined replica is left for the NEXT replication
+    # cycle (or an operator) — never retried forever in-line.
+    quarantined: List[int] = field(default_factory=list)
+    retries_spent: int = 0
 
     @property
     def ok(self) -> bool:
@@ -552,6 +585,12 @@ class FanoutStats:
     @property
     def n_ok(self) -> int:
         return sum(1 for r in self.replicas if r.ok)
+
+    @property
+    def majority_ok(self) -> bool:
+        """Graceful degradation floor: more than half the fleet committed
+        this tag (chaos CI asserts this under single-fault injection)."""
+        return self.n_ok * 2 > len(self.replicas)
 
     @property
     def deep_ok(self) -> bool:
@@ -604,10 +643,30 @@ class RelayNode(DeltaReceiver):
     failures are isolated per child (``fan.replicas``) and never poison
     the relay's own pull. Children may themselves be ``RelayNode``s —
     tiers nest arbitrarily deep.
+
+    **Retention leases** close the ROADMAP prune-vs-lagging-child race: at
+    ``negotiate`` the relay takes a ref-count lease (per child, TTL
+    ``lease_ttl_s``) on every tag its store currently holds for the image
+    — the base revisions a lagging child's delta resumes from. Retention
+    (``ckpt.prune_steps`` -> ``LayerStore.remove_image``) refuses to
+    collect a leased tag. A child's leases are released the moment it
+    COMMITS (it no longer needs any base) and simply expire if the child
+    died — so a dead edge can never pin the relay's disk forever, and a
+    live lagging one can never have its base pruned out from under it.
+
+    ``retry=`` (a ``ft.RetryPolicy``) makes the re-fan self-healing: a
+    child that failed its first fan is re-pushed from the relay's own
+    committed store with backoff, resuming from whatever bytes already
+    landed (orphan adoption); a child that exhausts its attempts is
+    quarantined on ``fan.quarantined`` with its ``RetryHealth``.
     """
 
+    LEASE_TTL_S = 600.0
+
     def __init__(self, store, children: Sequence = (),
-                 source: str = "inflight"):
+                 source: str = "inflight",
+                 retry: Optional[RetryPolicy] = None,
+                 lease_ttl_s: float = LEASE_TTL_S):
         if source not in ("inflight", "commit"):
             raise ValueError(f"source must be 'inflight' or 'commit', "
                              f"got {source!r}")
@@ -621,8 +680,15 @@ class RelayNode(DeltaReceiver):
         self.children: List[DeltaReceiver] = [_as_receiver(c)
                                               for c in children]
         self.source = source
+        self.retry = retry
+        self.lease_ttl_s = lease_ttl_s
         self._relay_lock = threading.Lock()
         self._begin_fan()
+
+    def _lease_owner(self, i: int) -> str:
+        """Stable per (this relay, child slot) across pushes and retries,
+        so a retry refreshes the same lease instead of stacking new ones."""
+        return f"relay-{id(self):x}/child-{i}"
 
     def begin_push(self) -> None:
         super().begin_push()
@@ -688,6 +754,16 @@ class RelayNode(DeltaReceiver):
         committed re-key twin) get their chunk lists probed at the child
         now — those blobs never need the parent."""
         have = super().negotiate(name, layer_meta)
+        # the relay's current tags are the base revisions a lagging child
+        # resumes from: lease them per child BEFORE any plan is made, so a
+        # concurrent/interleaved prune can never collect a base a child
+        # still negotiates against. Released at that child's commit;
+        # expires if the child dies mid-pull.
+        held_tags = self.store.list_tags(name)
+        for i in range(len(self.children)):
+            for t in held_tags:
+                self.store.acquire_lease(name, t, self._lease_owner(i),
+                                         self.lease_ttl_s)
         for i, child in enumerate(self.children):
             try:
                 ch = child.negotiate(name, layer_meta)
@@ -777,6 +853,9 @@ class RelayNode(DeltaReceiver):
 
     def _fan_children(self, manifest: Manifest, config: ImageConfig) -> None:
         t0 = time.perf_counter()
+        # a relay that dies at the re-fan point: its own tag committed,
+        # children receive nothing this round (retry/next poll converges)
+        fault_point("relay.fan", self.store.root)
         # blobs still owed to children: the serve-local plan plus any
         # in-flight blobs not yet forwarded (source="commit", or a child
         # plan learned after the blob passed through). Blob-major: ONE
@@ -830,8 +909,16 @@ class RelayNode(DeltaReceiver):
                 self.fan.replicas[i].stats = st
                 if isinstance(child, RelayNode):
                     self.fan.replicas[i].children = child.fan
+                # committed: this child needs no base revision anymore
+                self.store.release_lease(manifest.name,
+                                         self._lease_owner(i))
             except Exception as e:
                 self._fail_child(i, e)
+        if self.retry is not None:
+            _retry_failed(self.store, self.children, self.fan,
+                          manifest.name, manifest.tag, None, self.retry,
+                          on_converged=lambda i: self.store.release_lease(
+                              manifest.name, self._lease_owner(i)))
         self.fan.negotiation_rounds = max(
             (c.negotiations for c in self.children), default=0)
         self.fan.source_blob_reads = self.local_blob_reads
@@ -839,9 +926,67 @@ class RelayNode(DeltaReceiver):
         self.fan.wall_s = time.perf_counter() - t0
 
 
+def _retry_failed(src: LayerStore, receivers: Sequence, fan: FanoutStats,
+                  name: str, tag: str, source: Optional[str],
+                  retry: RetryPolicy, on_converged=None) -> None:
+    """Self-heal the failed replicas of a fan-out WITHIN the run: each one
+    gets up to ``retry.max_attempts - 1`` further single-destination pushes
+    (the main pass was attempt 1) with exponential backoff between them.
+    Every retry resumes from the replica's actual partial progress — blobs
+    that landed before the failure are adopted by the orphan re-hash at
+    ``probe_blobs``, never resent — so a retry pays only the remainder.
+    A replica that exhausts its attempts (or the deadline) is QUARANTINED:
+    indexed on ``fan.quarantined`` with the structured ``RetryHealth`` on
+    its ``ReplicaResult``, left for the next replication cycle."""
+    for i, rep in enumerate(fan.replicas):
+        if rep.ok:
+            continue
+        health = RetryHealth(attempts=1)
+        if rep.error:
+            health.errors.append(rep.error)
+        t0 = time.monotonic()
+        for n in range(1, retry.max_attempts):
+            delay = retry.backoff(n - 1)
+            if retry.deadline_s is not None and \
+                    time.monotonic() - t0 + delay > retry.deadline_s:
+                health.deadline_exceeded = True
+                break
+            time.sleep(delay)
+            health.backoff_total_s += delay
+            health.attempts += 1
+            health.retries += 1
+            fan.retries_spent += 1
+            try:
+                sub = replicate_fanout(src, [receivers[i]], name, tag,
+                                       source=source)
+                r0 = sub.replicas[0]
+                if not r0.ok:
+                    raise r0.exception if r0.exception is not None \
+                        else RuntimeError(r0.error)
+            except Exception as e:      # noqa: BLE001 — retry loop
+                health.record_error(e)
+                rep.error = f"{type(e).__name__}: {e}"
+                rep.exception = e
+                continue
+            rep.stats = r0.stats        # stats_partial keeps the FIRST
+            rep.error = None            # failure's books: retry delta is
+            rep.exception = None        # provably just the remainder
+            rep.children = r0.children
+            health.succeeded = True
+            if on_converged is not None:
+                on_converged(i)
+            break
+        health.wall_s = time.monotonic() - t0
+        if not health.succeeded:
+            health.quarantined = True
+            fan.quarantined.append(i)
+        rep.health = health
+
+
 def replicate_fanout(src: LayerStore, remotes: Sequence,
                      name: str, tag: str,
-                     source: Optional[str] = None) -> FanoutStats:
+                     source: Optional[str] = None,
+                     retry: Optional[RetryPolicy] = None) -> FanoutStats:
     """Fan-out delta replication: push ``name:tag`` to N replicas with ONE
     negotiated have-set and ONE source read pass.
 
@@ -919,6 +1064,13 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
         plans: Dict[int, Set[str]] = {}
         want: Dict[str, List[int]] = {}
         pool = hash_pool()
+        if pool is not None and \
+                threading.current_thread().name.startswith("repro-sha"):
+            # nested fan-out (relay child retry runs inside commit, which
+            # may itself execute on a pool worker): block-joining the
+            # shared pool from one of its own threads can deadlock on a
+            # small pool, so nested pushes run inline
+            pool = None
 
         def plan(i: int) -> None:
             try:
@@ -1041,17 +1193,22 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
         else:
             for i in live:
                 safe_finalize(i)
+    if retry is not None:
+        # batch scopes restored first: each retry attempt opens its own,
+        # so a retried replica's fsyncs are flushed by ITS commit
+        _retry_failed(src, receivers, fan, name, tag, source, retry)
     fan.wall_s = time.perf_counter() - t0
     return fan
 
 
 def push_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,
-               ) -> PushStats:
+               retry: Optional[RetryPolicy] = None) -> PushStats:
     """O(changed-bytes) push (module docstring): the single-destination
     form of ``replicate_fanout`` — one have-set negotiation, only missing
     layers + blobs over the pipelined transfer, incremental remote
-    verification at commit. Failures re-raise instead of being isolated."""
-    fan = replicate_fanout(src, [dst], name, tag)
+    verification at commit. Failures re-raise instead of being isolated
+    (after ``retry`` converges or quarantines, when one is given)."""
+    fan = replicate_fanout(src, [dst], name, tag, retry=retry)
     rep = fan.replicas[0]
     if rep.exception is not None:
         raise rep.exception
@@ -1059,10 +1216,10 @@ def push_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,
 
 
 def pull_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,
-               ) -> PushStats:
+               retry: Optional[RetryPolicy] = None) -> PushStats:
     """Pull = push with the roles swapped: ``dst`` negotiates its own
     have-set against ``src`` and receives only the delta."""
-    return push_delta(src, dst, name, tag)
+    return push_delta(src, dst, name, tag, retry=retry)
 
 
 # --------------------------------------------------------------- offline

@@ -45,6 +45,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..ft.faults import fault_point
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, assemble_tensor,
                       chunk_tensor, sha256_hex)
 from .fingerprint import fingerprint_chunks_ref
@@ -186,6 +187,18 @@ class LayerStore:
         # change at a manifest commit / image removal — cache per image
         # name, invalidated at exactly those two points.
         self._tags_cache: Dict[str, List[str]] = {}
+        # Retention leases: (name, tag) -> {owner: expiry (monotonic)}.
+        # A relay fanning a delta to lagging children takes a lease on the
+        # tags whose blobs those children may still need; retention
+        # (remove_image via ckpt.prune_steps) refuses to collect a leased
+        # tag until every lease is released (child committed) or expired
+        # (child died). gc() is lease-safe transitively: it only sweeps
+        # what no tagged manifest reaches, and the leased tag's manifest
+        # stays. In-memory by design — leases protect in-flight fan-outs
+        # of THIS process; a crashed relay's leases die with it, exactly
+        # the expiry semantics a restart wants.
+        self._leases: Dict[Tuple[str, str], Dict[str, float]] = {}
+        self._lease_lock = threading.Lock()
         for sub in ("blobs/sha256", "layers", "images"):
             os.makedirs(os.path.join(root, sub), exist_ok=True)
 
@@ -220,6 +233,50 @@ class LayerStore:
             self.fsyncs += len(batch)
         self._durable_paths.update(files)
 
+    # ---------------------------------------------------------------- leases
+    def acquire_lease(self, name: str, tag: str, owner: str,
+                      ttl_s: float) -> None:
+        """Hold ``name:tag`` against retention for ``ttl_s`` seconds on
+        behalf of ``owner``. Ref-counted by owner; re-acquiring refreshes
+        the expiry (a retried push extends its children's leases)."""
+        with self._lease_lock:
+            self._leases.setdefault((name, tag), {})[owner] = \
+                time.monotonic() + ttl_s
+
+    def release_lease(self, name: str, owner: str,
+                      tag: Optional[str] = None) -> int:
+        """Release ``owner``'s lease on ``tag`` (or on every tag of
+        ``name`` when tag is None — the child-committed case). Returns the
+        number of leases released."""
+        n = 0
+        with self._lease_lock:
+            for (nm, tg), owners in list(self._leases.items()):
+                if nm != name or (tag is not None and tg != tag):
+                    continue
+                if owners.pop(owner, None) is not None:
+                    n += 1
+                if not owners:
+                    del self._leases[(nm, tg)]
+        return n
+
+    def lease_holders(self, name: str, tag: str) -> List[str]:
+        """Owners with an unexpired lease on ``name:tag`` (expired entries
+        are purged here — expiry needs no background thread)."""
+        now = time.monotonic()
+        with self._lease_lock:
+            owners = self._leases.get((name, tag))
+            if not owners:
+                return []
+            live = {o: exp for o, exp in owners.items() if exp > now}
+            if live:
+                self._leases[(name, tag)] = live
+            else:
+                del self._leases[(name, tag)]
+            return sorted(live)
+
+    def leased(self, name: str, tag: str) -> bool:
+        return bool(self.lease_holders(name, tag))
+
     # ---------------------------------------------------------------- blobs
     def _blob_path(self, h: str) -> str:
         d = os.path.join(self.root, "blobs", "sha256", h[:2])
@@ -230,6 +287,7 @@ class LayerStore:
 
     def write_blob(self, h: str, data) -> bool:
         """Returns True if a new blob was written (False = dedup hit)."""
+        data = fault_point("store.write_blob", f"{self.root}:{h}", data)
         path = self._blob_path(h)
         if os.path.exists(path):
             if self.durability == "batch" and path not in self._durable_paths:
@@ -246,7 +304,28 @@ class LayerStore:
 
     def read_blob(self, h: str) -> bytes:
         with open(self._blob_path(h), "rb") as f:
-            return f.read()
+            data = f.read()
+        return fault_point("store.read_blob", f"{self.root}:{h}", data)
+
+    def ensure_blob_durable(self, h: str) -> None:
+        """Schedule durability for a blob ADOPTED from disk (an orphan of
+        a crashed push that re-hashed intact). Existence does not prove
+        the bytes ever hit stable storage — the crashed writer may have
+        died before its deferred fsync — so an adopter must re-arm the
+        fsync: inline under durability="full", at the next commit point
+        under "batch". Idempotent and free for already-durable paths."""
+        path = self._blob_path(h)
+        if path in self._durable_paths:
+            return
+        if self.durability == "full":
+            _fsync_path(path)
+            _fsync_path(os.path.dirname(path))
+            self.fsyncs += 2
+            self._durable_paths.add(path)
+        else:
+            with self._dirty_lock:
+                self._dirty_files.add(path)
+                self._dirty_dirs.add(os.path.dirname(path))
 
     def drop_blob(self, h: str) -> bool:
         """Delete one blob (caller must know it is unreferenced — e.g. a
@@ -303,6 +382,9 @@ class LayerStore:
 
     def write_image(self, manifest: Manifest, config: ImageConfig) -> None:
         d = self._image_dir(manifest.name)
+        # a crash HERE is the classic torn-commit point: blobs/layers on
+        # disk, manifest absent — the previous tag must stay authoritative
+        fault_point("store.commit", self.root)
         # Commit point: flush any deferred (durability="batch") blob/layer
         # writes before the manifest becomes visible, then write config +
         # manifest fully synced regardless of durability mode.
@@ -346,9 +428,14 @@ class LayerStore:
         self._tags_cache[name] = tags
         return list(tags)
 
-    def remove_image(self, name: str, tag: str) -> bool:
+    def remove_image(self, name: str, tag: str, force: bool = False) -> bool:
         """Unlink a tag's manifest (layers/blobs become GC fodder; run
-        ``gc()`` to reclaim them). Returns False if the tag didn't exist."""
+        ``gc()`` to reclaim them). Returns False if the tag didn't exist —
+        or if an unexpired retention lease holds it (a relay's lagging
+        child still needs its blobs; ``force=True`` overrides, for callers
+        that know the children are gone for good)."""
+        if not force and self.leased(name, tag):
+            return False
         try:
             os.remove(os.path.join(self.root, "images", name, f"{tag}.json"))
         except OSError:

@@ -1,6 +1,11 @@
 from .straggler import DeadlineSkipper, StragglerStats
 from .watchdog import Watchdog
 from .elastic import shrink_mesh_shape
+from .faults import (CrashInjected, FaultEvent, FaultInjected, FaultInjector,
+                     FaultSpec, fault_point, inject)
+from .retry import RetryExhausted, RetryHealth, RetryPolicy
 
 __all__ = ["DeadlineSkipper", "StragglerStats", "Watchdog",
-           "shrink_mesh_shape"]
+           "shrink_mesh_shape", "CrashInjected", "FaultEvent",
+           "FaultInjected", "FaultInjector", "FaultSpec", "fault_point",
+           "inject", "RetryExhausted", "RetryHealth", "RetryPolicy"]

@@ -1,0 +1,289 @@
+"""Chaos harness: the seeded fault matrix CI soaks nightly.
+
+Every cell of ``(drop | corrupt | delay | crash) x (push | fanout | relay |
+follower)`` runs one end-to-end replication under an installed
+``FaultInjector`` and asserts the topology converges **automatically** — no
+manual retry call — to bit-identical committed replicas at every tier with
+zero torn stores (``verify_image(deep=True)`` clean everywhere). Fire
+decisions are a pure function of the seed (see ``ft.faults``), so any
+failing cell replays bit-identically from the repro line it prints:
+
+    PYTHONPATH=src python -m repro.ft.chaos --seeds 7 \\
+        --scenarios relay --modes corrupt
+
+Usage (tests import these; CI runs the CLI):
+
+    from repro.ft.chaos import run_cell, run_matrix
+    cell = run_cell("fanout", "crash", seed=3, base_dir=tmp)   # one cell
+    cells = run_matrix(seeds=range(4))                         # full matrix
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from .faults import FaultSpec, inject
+from .retry import RetryPolicy
+
+MODES = ("drop", "corrupt", "delay", "crash")
+SCENARIOS = ("push", "fanout", "relay", "follower")
+
+# fast-converging policy: chaos cells only need *bounded* waits, the
+# backoff-shape guarantees are hypothesis-proved in test_retry_property
+_POLICY_KW = dict(max_attempts=4, base_delay_s=0.001, max_delay_s=0.02)
+
+
+@dataclass
+class ChaosCell:
+    """Outcome of one matrix cell (also the failure record: ``error``
+    carries the assertion + the repro line)."""
+
+    scenario: str
+    mode: str
+    seed: int
+    fired: int = 0                  # fault events the injector logged
+    retries_spent: int = 0
+    ok: bool = False
+    error: str = ""
+
+    @property
+    def repro(self) -> str:
+        return (f"PYTHONPATH=src python -m repro.ft.chaos "
+                f"--seeds {self.seed} --scenarios {self.scenario} "
+                f"--modes {self.mode}")
+
+
+# --------------------------------------------------------------- fixtures
+def _stores(base_dir: str, *names: str):
+    from ..core import LayerStore
+    return [LayerStore(str(Path(base_dir) / n), chunk_bytes=512)
+            for n in names]
+
+
+def _payloads(seed: int) -> Dict[str, Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(1000 + seed)
+    return {"src": {"a": rng.standard_normal(1000).astype(np.float32),
+                    "b": rng.standard_normal(500).astype(np.float32)},
+            "deps": {"lib": rng.standard_normal(4000).astype(np.float32)}}
+
+
+def _build_app(store, payloads) -> None:
+    from ..core import Instruction
+    ins = [Instruction("FROM", "base", "config"),
+           Instruction("COPY", "src", "content"),
+           Instruction("RUN", "deps", "content"),
+           Instruction("CMD", "run", "config")]
+    store.build_image("app", "v1", ins,
+                      {k: (lambda v=v: v) for k, v in payloads.items()})
+
+
+def _inject_v2(store, payloads) -> None:
+    from ..core import inject_payload_update
+    src2 = {k: v.copy() for k, v in payloads["src"].items()}
+    src2["b"][3] = 42.0                     # ONE changed 512 B chunk
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"deps": lambda: payloads["deps"]})
+
+
+def _snapshot(store, name: str, tag: str) -> dict:
+    """Byte-exact image state — manifest, config, layer files, blobs."""
+    manifest, config = store.read_image(name, tag)
+    layers, blobs = {}, {}
+    for lid in manifest.layer_ids:
+        with open(store._layer_path(lid), "rb") as f:
+            layers[lid] = f.read()
+        for rec in store.read_layer(lid).records:
+            for h in rec.chunks:
+                blobs[h] = store.read_blob(h)
+    return {"manifest": manifest.to_json(), "config": config.to_json(),
+            "layers": layers, "blobs": blobs}
+
+
+def _assert_converged(src, dsts, name: str, tag: str) -> None:
+    want = _snapshot(src, name, tag)
+    for d in dsts:
+        problems = d.verify_image(name, tag, deep=True)
+        assert problems == [], f"torn store {d.root}: {problems}"
+        assert _snapshot(d, name, tag) == want, \
+            f"replica {d.root} not bit-identical to source"
+
+
+def _spec(mode: str, match: str) -> FaultSpec:
+    # crash strikes the commit point (death just before the manifest
+    # rename); the other modes strike the blob transfer itself
+    if mode == "crash":
+        return FaultSpec(point="wire.commit", mode="crash", match=match)
+    return FaultSpec(point="wire.receive_blob", mode=mode, match=match)
+
+
+# -------------------------------------------------------------- scenarios
+def _run_push(base_dir: str, mode: str, seed: int) -> tuple:
+    from ..core import push_delta
+    src, dst = _stores(base_dir, "src", "dst")
+    payloads = _payloads(seed)
+    _build_app(src, payloads)
+    push_delta(src, dst, "app", "v1")               # warm base, no faults
+    _inject_v2(src, payloads)
+    policy = RetryPolicy(seed=seed, **_POLICY_KW)
+    with inject(seed, _spec(mode, dst.root)) as inj:
+        push_delta(src, dst, "app", "v2", retry=policy)
+    _assert_converged(src, [dst], "app", "v2")
+    return inj.fired(), 0
+
+
+def _run_fanout(base_dir: str, mode: str, seed: int) -> tuple:
+    from ..core import replicate_fanout
+    src, r0, r1, r2 = _stores(base_dir, "src", "r0", "r1", "r2")
+    payloads = _payloads(seed)
+    _build_app(src, payloads)
+    replicate_fanout(src, [r0, r1, r2], "app", "v1")
+    _inject_v2(src, payloads)
+    policy = RetryPolicy(seed=seed, **_POLICY_KW)
+    with inject(seed, _spec(mode, r1.root)) as inj:   # one sick replica
+        fan = replicate_fanout(src, [r0, r1, r2], "app", "v2",
+                               retry=policy)
+    assert fan.majority_ok, "healthy majority failed to commit"
+    assert fan.n_ok == 3, \
+        f"retry did not converge replica 1: {fan.replicas[1].error}"
+    _assert_converged(src, [r0, r1, r2], "app", "v2")
+    return inj.fired(), fan.retries_spent
+
+
+def _run_relay(base_dir: str, mode: str, seed: int) -> tuple:
+    from ..core import RelayNode, replicate_fanout
+    src, mid, e0, e1 = _stores(base_dir, "src", "mid", "e0", "e1")
+    payloads = _payloads(seed)
+    _build_app(src, payloads)
+    policy = RetryPolicy(seed=seed, **_POLICY_KW)
+    relay = RelayNode(mid, children=[e0, e1], retry=policy)
+    replicate_fanout(src, [relay], "app", "v1")
+    _inject_v2(src, payloads)
+    with inject(seed, _spec(mode, e0.root)) as inj:   # one sick edge
+        fan = replicate_fanout(src, [relay], "app", "v2", retry=policy)
+    rep = fan.replicas[0]
+    assert rep.ok, f"relay tier failed: {rep.error}"
+    assert rep.children is not None and rep.children.n_ok == 2, \
+        "child retry did not converge the edge tier"
+    _assert_converged(src, [mid, e0, e1], "app", "v2")
+    assert not mid.leased("app", "v2"), \
+        "converged children must have released their leases"
+    return inj.fired(), fan.retries_spent + rep.children.retries_spent
+
+
+def _run_follower(base_dir: str, mode: str, seed: int) -> tuple:
+    # lazy: serve pulls in jax; the other scenarios stay numpy-only
+    from ..core import Instruction, inject_payload_update
+    from ..serve.engine import CheckpointFollower
+    remote, local = _stores(base_dir, "remote", "local")
+    rng = np.random.default_rng(2000 + seed)
+    state = {"params/w": rng.standard_normal(1000).astype(np.float32),
+             "opt/m": rng.standard_normal(500).astype(np.float32),
+             "opt/__step__": np.asarray([1], np.int32)}
+    ins = [Instruction("FROM", "arch", "config"),
+           Instruction("COPY", "state", "content")]
+    remote.build_image("ckpt", "step-00000001", ins,
+                       {"state": lambda: state})
+    policy = RetryPolicy(seed=seed, **_POLICY_KW)
+    follower = CheckpointFollower(remote, local, keep=3, retry=policy)
+    assert follower.poll().step == 1                 # warm base, no faults
+    state2 = {k: v.copy() for k, v in state.items()}
+    state2["params/w"][7] = 42.0
+    state2["opt/__step__"][0] = 2
+    inject_payload_update(remote, "ckpt", "step-00000001",
+                          "step-00000002", {"state": state2})
+    with inject(seed, _spec(mode, local.root)) as inj:
+        upd = follower.poll()
+    assert upd is not None and upd.step == 2, "follower failed to advance"
+    _assert_converged(remote, [local], "ckpt", "step-00000002")
+    health = follower.health()
+    assert health.consecutive_failures == 0 and health.last_success_step == 2
+    return inj.fired(), health.retries_spent
+
+
+_RUNNERS = {"push": _run_push, "fanout": _run_fanout,
+            "relay": _run_relay, "follower": _run_follower}
+
+
+# ---------------------------------------------------------------- harness
+def run_cell(scenario: str, mode: str, seed: int,
+             base_dir: Optional[str] = None) -> ChaosCell:
+    """One matrix cell; raises AssertionError (with the repro line) on a
+    convergence failure so pytest integration stays natural."""
+    cell = ChaosCell(scenario=scenario, mode=mode, seed=seed)
+    try:
+        if base_dir is None:
+            with tempfile.TemporaryDirectory(prefix="chaos-") as tmp:
+                fired, retries = _RUNNERS[scenario](tmp, mode, seed)
+        else:
+            fired, retries = _RUNNERS[scenario](str(base_dir), mode, seed)
+        cell.fired, cell.retries_spent = fired, retries
+        assert cell.fired >= 1, \
+            f"fault point never fired — {scenario} wiring broken?"
+        cell.ok = True
+    except AssertionError as e:
+        cell.error = f"{e}\n  repro: {cell.repro}"
+        raise AssertionError(cell.error) from e
+    return cell
+
+
+def run_matrix(seeds: Iterable[int], modes: Iterable[str] = MODES,
+               scenarios: Iterable[str] = SCENARIOS,
+               fail_fast: bool = False) -> List[ChaosCell]:
+    """The full soak. Never raises unless ``fail_fast`` — failed cells come
+    back with ``ok=False`` and their repro line in ``error``."""
+    cells: List[ChaosCell] = []
+    for seed in seeds:
+        for scenario in scenarios:
+            for mode in modes:
+                try:
+                    cells.append(run_cell(scenario, mode, seed))
+                except AssertionError as e:
+                    if fail_fast:
+                        raise
+                    cells.append(ChaosCell(scenario=scenario, mode=mode,
+                                           seed=seed, error=str(e)))
+                except Exception as e:      # noqa: BLE001 — soak must
+                    bad = ChaosCell(scenario=scenario, mode=mode,  # report
+                                    seed=seed)                     # not die
+                    bad.error = f"{type(e).__name__}: {e}\n" \
+                                f"  repro: {bad.repro}"
+                    if fail_fast:
+                        raise AssertionError(bad.error) from e
+                    cells.append(bad)
+    return cells
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", default="0:4",
+                    help="'N' for one seed or 'A:B' for a range")
+    ap.add_argument("--modes", default=",".join(MODES))
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS))
+    args = ap.parse_args(argv)
+    if ":" in args.seeds:
+        lo, hi = args.seeds.split(":")
+        seeds: Iterable[int] = range(int(lo), int(hi))
+    else:
+        seeds = [int(args.seeds)]
+    cells = run_matrix(seeds, modes=args.modes.split(","),
+                       scenarios=args.scenarios.split(","))
+    bad = [c for c in cells if not c.ok]
+    for c in cells:
+        mark = "ok " if c.ok else "FAIL"
+        print(f"[{mark}] seed={c.seed:<3d} {c.scenario:<8s} {c.mode:<7s} "
+              f"fired={c.fired} retries={c.retries_spent}")
+    for c in bad:
+        print(f"\nFAILED {c.scenario}/{c.mode} seed={c.seed}:\n{c.error}",
+              file=sys.stderr)
+    print(f"\n{len(cells) - len(bad)}/{len(cells)} cells converged")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,5 +1,7 @@
-from .engine import (CheckpointFollower, Engine, GenerationResult,
-                     SparseUpdate, changed_tensor_paths)
+from .engine import (CheckpointFollower, Engine, EngineHealth,
+                     FollowerHealth, GenerationResult, SparseUpdate,
+                     changed_tensor_paths)
 
-__all__ = ["CheckpointFollower", "Engine", "GenerationResult",
-           "SparseUpdate", "changed_tensor_paths"]
+__all__ = ["CheckpointFollower", "Engine", "EngineHealth",
+           "FollowerHealth", "GenerationResult", "SparseUpdate",
+           "changed_tensor_paths"]

@@ -25,6 +25,7 @@ the in-flight pull by default.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Iterable, Optional, Sequence, Set
 
@@ -33,7 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (LayerStore, PushRejected, PushStats, RelayNode,
-                    diff_tensor_records, pull_delta, replicate_fanout)
+                    diff_tensor_records, replicate_fanout)
+from ..ft.faults import fault_point
+from ..ft.retry import RetryPolicy
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
 
@@ -89,18 +92,56 @@ class SparseUpdate:
         yield from (self.step, self.params, self.opt_state)
 
 
+@dataclass
+class FollowerHealth:
+    """Structured liveness snapshot of a ``CheckpointFollower`` — what a
+    fleet controller reads to decide whether a replica is merely lagging
+    (staleness grows, failures transient) or sick (consecutive failures
+    climbing, same error repeating) and should be drained."""
+
+    polls: int                      # poll() calls made
+    failures: int                   # polls that raised
+    consecutive_failures: int       # current unbroken failure run
+    last_success_step: Optional[int]
+    staleness_s: Optional[float]    # seconds since the last applied update
+    retries_spent: int              # in-run retries the pull path consumed
+    last_error: Optional[str]
+
+
+@dataclass
+class EngineHealth:
+    """Snapshot of the serving engine's weight freshness: how many swaps
+    have landed, what revision serves now, how long it has served."""
+
+    refreshes: int
+    last_refresh_leaves: int
+    last_refresh_step: Optional[int]
+    staleness_s: Optional[float]    # seconds since the last weight swap
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.last_refresh_leaves = 0
+        self._refreshes = 0
+        self._last_refresh_t: Optional[float] = None
+        self._last_refresh_step: Optional[int] = None
         self._prefill = jax.jit(lambda p, t: prefill(cfg, p, t))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
 
-    def refresh(self, params,
-                changed: Optional[Iterable[str]] = None) -> int:
+    def health(self) -> EngineHealth:
+        return EngineHealth(
+            refreshes=self._refreshes,
+            last_refresh_leaves=self.last_refresh_leaves,
+            last_refresh_step=self._last_refresh_step,
+            staleness_s=None if self._last_refresh_t is None
+            else time.monotonic() - self._last_refresh_t)
+
+    def refresh(self, params, changed: Optional[Iterable[str]] = None,
+                step: Optional[int] = None) -> int:
         """Hot-swap weights (e.g. from CheckpointFollower.poll). Params are
         a jit argument, so same-shape updates reuse the compiled
         prefill/decode executables — no retrace, no downtime.
@@ -116,6 +157,7 @@ class Engine:
         if changed is None:
             self.params = params
             self.last_refresh_leaves = len(jax.tree.leaves(params))
+            self._stamp_refresh(step)
             return self.last_refresh_leaves
         root = dict(self.params)
         fresh = {id(root)}          # nodes already copied this refresh
@@ -149,7 +191,14 @@ class Engine:
             n += 1
         self.params = root
         self.last_refresh_leaves = n
+        self._stamp_refresh(step)
         return n
+
+    def _stamp_refresh(self, step: Optional[int]) -> None:
+        self._refreshes += 1
+        self._last_refresh_t = time.monotonic()
+        if step is not None:
+            self._last_refresh_step = step
 
     def generate(self, prompts: np.ndarray, steps: int,
                  temperature: float = 0.0, seed: int = 0,
@@ -243,43 +292,86 @@ class CheckpointFollower:
 
     def __init__(self, remote, local, image: str = IMAGE, keep: int = 2,
                  sparse: bool = True, children: Sequence = (),
-                 source: str = "inflight"):
+                 source: str = "inflight",
+                 retry: Optional[RetryPolicy] = None):
         self.remote = remote if isinstance(remote, LayerStore) \
             else LayerStore(str(remote))
         self.local = local if isinstance(local, LayerStore) \
             else LayerStore(str(local))
         self.relay = RelayNode(self.local, children=children,
-                               source=source) if children else None
+                               source=source, retry=retry) if children \
+            else None
         self.image = image
         self.keep = keep
         self.sparse = sparse
+        self.retry = retry            # in-run self-healing for the pull
         self.last_step: Optional[int] = None
         self.last_pull: Optional[PushStats] = None
         self.last_update: Optional[SparseUpdate] = None
         self.last_fan = None          # child-tier FanoutStats (relay mode)
+        self._polls = 0
+        self._failures = 0
+        self._consecutive_failures = 0
+        self._retries_spent = 0
+        self._last_success_t: Optional[float] = None
+        self._last_error: Optional[str] = None
+
+    def health(self) -> FollowerHealth:
+        """Structured snapshot for fleet controllers: staleness is seconds
+        since the last APPLIED update (None before the first), consecutive
+        failures reset on any clean poll — including an up-to-date None."""
+        return FollowerHealth(
+            polls=self._polls, failures=self._failures,
+            consecutive_failures=self._consecutive_failures,
+            last_success_step=self.last_step,
+            staleness_s=None if self._last_success_t is None
+            else time.monotonic() - self._last_success_t,
+            retries_spent=self._retries_spent,
+            last_error=self._last_error)
 
     def _pull(self, tag: str) -> Optional[PushStats]:
         """One delta pull (re-fanned to children in relay mode), hardened
         against the retention race: if the trainer pruned ``tag`` between
         ``latest_step`` and the pull, give up quietly — the next poll sees
         a newer tag. Anything that fails while the remote still HAS the
-        tag is a real error and re-raises."""
+        tag is a real error and re-raises (after ``retry`` converged or
+        quarantined, when one is configured)."""
         try:
+            fault_point("follower.pull", f"{self.local.root}:{tag}")
+            fan = replicate_fanout(self.remote,
+                                   [self.relay or self.local],
+                                   self.image, tag, retry=self.retry)
+            self._retries_spent += fan.retries_spent
+            rep = fan.replicas[0]
+            if rep.exception is not None:
+                raise rep.exception
             if self.relay is not None:
-                fan = replicate_fanout(self.remote, [self.relay],
-                                       self.image, tag)
-                rep = fan.replicas[0]
-                if rep.exception is not None:
-                    raise rep.exception
                 self.last_fan = rep.children
-                return rep.stats
-            return pull_delta(self.remote, self.local, self.image, tag)
+            return rep.stats
         except (OSError, PushRejected):
             if self.remote.has_image(self.image, tag):
                 raise
             return None
 
     def poll(self) -> Optional[SparseUpdate]:
+        """Health-instrumented wrapper over the sync step: failures are
+        COUNTED (consecutive run + last error) before re-raising, so a
+        crashing poll leaves a readable record; see ``health()``."""
+        self._polls += 1
+        try:
+            upd = self._poll_inner()
+        except Exception as e:
+            self._failures += 1
+            self._consecutive_failures += 1
+            self._last_error = f"{type(e).__name__}: {e}"
+            raise
+        self._consecutive_failures = 0
+        self._last_error = None
+        if upd is not None:
+            self._last_success_t = time.monotonic()
+        return upd
+
+    def _poll_inner(self) -> Optional[SparseUpdate]:
         # lazy import: ckpt depends on core only, but keep serve->ckpt
         # out of module import time. The shared helpers guarantee the
         # replica and the trainer agree on tag format + retention.

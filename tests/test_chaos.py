@@ -1,0 +1,431 @@
+"""Chaos-hardened replication: deterministic fault injection, in-run
+self-healing retries (counter-proved to pay only the un-transferred
+remainder), quarantine after bounded attempts, relay retention leases that
+survive injected faults, and the batch-durability crash seam."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, RelayNode,
+                        inject_payload_update, push_delta, replicate_fanout)
+from repro.ft import (CrashInjected, FaultInjected, FaultInjector,
+                      FaultSpec, RetryPolicy, inject)
+from repro.ft.chaos import run_cell
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "src", "content"),
+    Instruction("RUN", "deps", "content"),
+    Instruction("CMD", "run", "config"),
+]
+
+
+def mk(tmp_path, name, **kw):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512, **kw)
+
+
+def make_payloads(rng):
+    return {
+        "src": {"a": rng.standard_normal(25000).astype(np.float32),
+                "b": rng.standard_normal(500).astype(np.float32)},
+        "deps": {"lib": rng.standard_normal(4000).astype(np.float32)},
+    }
+
+
+def build_v1(store, payloads):
+    store.build_image("app", "v1", INS,
+                      {k: (lambda v=v: v) for k, v in payloads.items()})
+
+
+def inject_v2_wide(store, payloads):
+    """v2 changes ~40 separate 512 B chunks of 'src' — wider than one
+    32-blob transfer wave, so a fault targeting a wave-2 blob strikes with
+    a full wave of partial progress deterministically behind it."""
+    src2 = {k: v.copy() for k, v in payloads["src"].items()}
+    for idx in range(40):
+        src2["a"][idx * 128] = 42.0          # one float per 512 B chunk
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"deps": lambda: payloads["deps"]})
+
+
+def delta_blob_hashes(src, dst, name, tag):
+    """The sorted blob set a push of ``name:tag`` would send ``dst`` — the
+    same sorted order the transfer ships in, so index 32+ is in wave 2."""
+    manifest, _ = src.read_image(name, tag)
+    return sorted({h for lid in manifest.layer_ids
+                   for rec in src.read_layer(lid).records
+                   for h in rec.chunks if not dst.has_blob(h)})
+
+
+def snapshot(store, name, tag):
+    manifest, config = store.read_image(name, tag)
+    layers, blobs = {}, {}
+    for lid in manifest.layer_ids:
+        with open(store._layer_path(lid), "rb") as f:
+            layers[lid] = f.read()
+        for rec in store.read_layer(lid).records:
+            for h in rec.chunks:
+                blobs[h] = store.read_blob(h)
+    return {"manifest": manifest.to_json(), "config": config.to_json(),
+            "layers": layers, "blobs": blobs}
+
+
+FAST = dict(max_attempts=3, base_delay_s=0.001, max_delay_s=0.01)
+
+
+# ------------------------------------------------------- fault injection
+def test_fault_points_are_noops_when_uninstalled(tmp_path, rng):
+    """No injector installed -> the threaded fault points change nothing:
+    a push is bit-identical to one on a build that never imported ft."""
+    store, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    push_delta(store, dst, "app", "v1")
+    assert dst.verify_image("app", "v1", deep=True) == []
+    assert snapshot(dst, "app", "v1") == snapshot(store, "app", "v1")
+
+
+def test_injector_decisions_are_order_independent():
+    """Fire decisions depend on (seed, point, key, nth-hit) — NOT on the
+    global arrival order — so pool-thread interleavings can't change which
+    hits fire. Same hits in reversed per-key order => same decisions."""
+    keys = [f"store-{i}:blob-{j}" for i in range(3) for j in range(4)]
+
+    def decide(order):
+        inj = FaultInjector(seed=7, specs=[
+            FaultSpec(point="wire.receive_blob", mode="delay",
+                      prob=0.5, times=None, delay_s=0.0)])
+        for k in order:
+            inj.hit("wire.receive_blob", k, b"x")
+        return {(e.key, e.hit) for e in inj.log}
+
+    assert decide(keys) == decide(list(reversed(keys)))
+
+
+def test_corrupt_flips_exactly_one_deterministic_byte():
+    inj = FaultInjector(seed=3, specs=[
+        FaultSpec(point="wire.receive_blob", mode="corrupt")])
+    data = bytes(range(256))
+    out1 = inj.hit("wire.receive_blob", "k", data)
+    inj2 = FaultInjector(seed=3, specs=[
+        FaultSpec(point="wire.receive_blob", mode="corrupt")])
+    out2 = inj2.hit("wire.receive_blob", "k", data)
+    assert out1 == out2 != data
+    assert sum(a != b for a, b in zip(out1, data)) == 1
+
+
+def test_nested_injector_install_rejected():
+    with inject(0, FaultSpec(point="x", mode="drop")):
+        with pytest.raises(RuntimeError):
+            with inject(1, FaultSpec(point="y", mode="drop")):
+                pass
+
+
+# ------------------------------------------------- retry pays only delta
+def test_retry_resumes_from_partial_counter_proved(tmp_path, rng):
+    """A drop mid-transfer fails the replica with real partial progress;
+    the in-run retry converges it and its books prove the retry paid ONLY
+    the remainder: retry payload == full delta − first-attempt payload."""
+    store, dst, control = (mk(tmp_path, n) for n in ("src", "dst", "ctl"))
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    for d in (dst, control):
+        push_delta(store, d, "app", "v1")
+    inject_v2_wide(store, payloads)
+    need = delta_blob_hashes(store, dst, "app", "v2")
+    assert len(need) >= 35                   # the delta spans two waves
+    delta = push_delta(store, control, "app", "v2")   # clean reference
+    assert delta.blobs_sent == len(need)
+
+    policy = RetryPolicy(seed=1, **FAST)
+    # drop exactly one wave-2 blob: wave 1 (32 blobs) has fully landed —
+    # ship+receive barriers per wave — before the fault can strike
+    with inject(1, FaultSpec(point="wire.receive_blob", mode="drop",
+                             match=need[34])) as inj:
+        fan = replicate_fanout(store, [dst], "app", "v2", retry=policy)
+    assert inj.fired() == 1
+    rep = fan.replicas[0]
+    assert rep.ok and rep.health is not None and rep.health.succeeded
+    assert rep.health.retries == 1 and fan.retries_spent == 1
+    assert fan.quarantined == []
+    # the counter-proof. stats_partial keeps the first attempt's books:
+    # at least the full first wave landed before the drop.
+    assert rep.stats_partial.blobs_sent >= 32
+    assert rep.stats.bytes_payload == \
+        delta.bytes_payload - rep.stats_partial.bytes_payload
+    assert rep.stats.blobs_sent == delta.blobs_sent - \
+        rep.stats_partial.blobs_sent
+    assert snapshot(dst, "app", "v2") == snapshot(store, "app", "v2")
+    assert dst.verify_image("app", "v2", deep=True) == []
+
+
+def test_quarantine_after_exactly_max_attempts(tmp_path, rng):
+    """A persistently-sick replica is retried exactly max_attempts times
+    total (injector hit count proves it), then quarantined with the
+    structured health record — while the healthy majority commits."""
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    replicas = [mk(tmp_path, f"r{i}") for i in range(3)]
+    for r in replicas:
+        push_delta(store, r, "app", "v1")
+    inject_v2_wide(store, payloads)
+
+    policy = RetryPolicy(seed=0, **FAST)
+    with inject(0, FaultSpec(point="wire.negotiate", mode="drop",
+                             match=replicas[1].root, times=None)) as inj:
+        fan = replicate_fanout(store, replicas, "app", "v2", retry=policy)
+    assert inj.fired("wire.negotiate") == policy.max_attempts
+    assert fan.quarantined == [1] and fan.n_ok == 2 and fan.majority_ok
+    bad = fan.replicas[1]
+    assert not bad.ok and bad.health.quarantined
+    assert bad.health.attempts == policy.max_attempts
+    assert bad.health.retries == policy.max_attempts - 1
+    assert len(bad.health.errors) >= policy.max_attempts
+    assert not replicas[1].has_image("app", "v2")      # never torn, never
+    assert replicas[1].verify_image("app", "v1", deep=True) == []  # committed
+    for i in (0, 2):
+        assert snapshot(replicas[i], "app", "v2") == \
+            snapshot(store, "app", "v2")
+    # the sick replica converges on the NEXT cycle once the fault clears
+    fan2 = replicate_fanout(store, replicas, "app", "v2")
+    assert fan2.ok
+    assert snapshot(replicas[1], "app", "v2") == snapshot(store, "app", "v2")
+
+
+def test_retry_respects_deadline(tmp_path, rng):
+    """deadline_s=0 can't contain any backoff sleep: no retry is ever
+    attempted, the failure quarantines immediately with the flag set."""
+    store, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    policy = RetryPolicy(seed=0, deadline_s=0.0, **FAST)
+    with inject(0, FaultSpec(point="wire.commit", mode="drop",
+                             match=dst.root, times=None)):
+        fan = replicate_fanout(store, [dst], "app", "v1", retry=policy)
+    rep = fan.replicas[0]
+    assert not rep.ok and rep.health.quarantined
+    assert rep.health.deadline_exceeded and rep.health.attempts == 1
+
+
+def test_crash_mid_commit_retries_to_convergence(tmp_path, rng):
+    """CrashInjected at the receiver's commit (death just before the
+    manifest rename): previous tag intact, retry adopts the debris and
+    the remainder-only accounting still holds (everything landed, so the
+    successful attempt re-sends NO payload bytes)."""
+    store, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    push_delta(store, dst, "app", "v1")
+    inject_v2_wide(store, payloads)
+    policy = RetryPolicy(seed=5, **FAST)
+    with inject(5, FaultSpec(point="wire.commit", mode="crash",
+                             match=dst.root)):
+        fan = replicate_fanout(store, [dst], "app", "v2", retry=policy)
+    rep = fan.replicas[0]
+    assert rep.ok and isinstance(rep.health.errors[0], str)
+    assert "CrashInjected" in rep.health.errors[0]
+    assert rep.stats.bytes_payload == 0          # all blobs were adopted
+    assert rep.stats_partial.bytes_payload > 0   # ...from attempt 1's work
+    assert snapshot(dst, "app", "v2") == snapshot(store, "app", "v2")
+    assert dst.verify_image("app", "v2", deep=True) == []
+
+
+# ------------------------------------------------------ retention leases
+def test_lease_blocks_remove_until_release_or_expiry(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    store.acquire_lease("app", "v1", "child-a", ttl_s=60.0)
+    store.acquire_lease("app", "v1", "child-b", ttl_s=0.05)
+    assert store.lease_holders("app", "v1") == ["child-a", "child-b"]
+    assert store.remove_image("app", "v1") is False      # refused
+    assert store.has_image("app", "v1")
+    assert store.release_lease("app", "child-a") == 1    # ref-counted:
+    time.sleep(0.06)                                     # b expires alone
+    assert not store.leased("app", "v1")
+    assert store.remove_image("app", "v1") is True
+
+
+def test_lease_force_override_and_gc_safety(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    inject_v2_wide(store, payloads)
+    store.acquire_lease("app", "v1", "child", ttl_s=60.0)
+    # gc with the leased tag still present keeps every blob it references
+    store.gc()
+    assert store.verify_image("app", "v1", deep=True) == []
+    assert store.remove_image("app", "v1", force=True) is True
+    store.gc()
+    assert store.verify_image("app", "v2", deep=True) == []
+
+
+def test_prune_steps_skips_leased_tags(tmp_path, rng):
+    from repro.ckpt.manager import prune_steps
+    store = mk(tmp_path, "ckpt")
+    state = {"params/w": rng.standard_normal(600).astype(np.float32)}
+    ins = [Instruction("FROM", "arch", "config"),
+           Instruction("COPY", "state", "content")]
+    store.build_image("ckpt", "step-00000001", ins,
+                      {"state": lambda: state})
+    for step in (2, 3, 4):
+        state = {"params/w": state["params/w"].copy()}
+        state["params/w"][step] = float(step)
+        inject_payload_update(store, "ckpt", f"step-{step - 1:08d}",
+                              f"step-{step:08d}", {"state": state})
+    store.acquire_lease("ckpt", "step-00000001", "lagging-child",
+                        ttl_s=60.0)
+    assert prune_steps(store, "ckpt", keep=2)
+    tags = set(store.list_tags("ckpt"))
+    assert "step-00000001" in tags          # lease held it open
+    assert "step-00000002" not in tags      # unleased victim pruned
+    assert store.verify_image("ckpt", "step-00000001", deep=True) == []
+    store.release_lease("ckpt", "lagging-child")
+    assert prune_steps(store, "ckpt", keep=2)
+    assert set(store.list_tags("ckpt")) == {"step-00000003",
+                                            "step-00000004"}
+
+
+def test_relay_leases_released_on_child_commit(tmp_path, rng):
+    store, mid, e0, e1 = (mk(tmp_path, n)
+                          for n in ("src", "mid", "e0", "e1"))
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    relay = RelayNode(mid, children=[e0, e1])
+    fan = replicate_fanout(store, [relay], "app", "v1")
+    assert fan.ok and fan.replicas[0].children.n_ok == 2
+    assert not mid.leased("app", "v1")       # both children committed
+
+
+def test_relay_dead_child_lease_expires_then_prune_proceeds(tmp_path, rng):
+    """The ISSUE's fault-proved lease lifecycle: a child that dies mid-pull
+    leaves its lease held (prune refuses the base), the lease expires on
+    the deadline, and prune then reclaims — while a LIVE lagging child's
+    base tag had survived the whole time."""
+    from repro.ckpt.manager import prune_steps
+    store, mid, edge = (mk(tmp_path, n) for n in ("src", "mid", "edge"))
+    state = {"params/w": rng.standard_normal(600).astype(np.float32)}
+    ins = [Instruction("FROM", "arch", "config"),
+           Instruction("COPY", "state", "content")]
+    store.build_image("ckpt", "step-00000001", ins,
+                      {"state": lambda: state})
+    relay = RelayNode(mid, children=[edge], lease_ttl_s=0.2)
+    fan = replicate_fanout(store, [relay], "ckpt", "step-00000001")
+    assert fan.ok and not mid.leased("ckpt", "step-00000001")
+
+    for step in (2, 3):
+        state = {"params/w": state["params/w"].copy()}
+        state["params/w"][step] = float(step)
+        inject_payload_update(store, "ckpt", f"step-{step - 1:08d}",
+                              f"step-{step:08d}", {"state": state})
+    # the child DIES mid-pull (drop fires at every receive, no retry):
+    # the relay itself commits step-2, the child's lease on the relay's
+    # base tag (step-1) stays held
+    with inject(0, FaultSpec(point="wire.receive_blob", mode="drop",
+                             match=edge.root, times=None)):
+        fan = replicate_fanout(store, [relay], "ckpt", "step-00000002")
+    assert fan.ok                            # relay tier committed
+    assert not fan.replicas[0].children.ok   # child did not
+    assert mid.leased("ckpt", "step-00000001")
+    # prune under load: keep=1 would collect step-1, the lease refuses
+    prune_steps(mid, "ckpt", keep=1)
+    assert "step-00000001" in mid.list_tags("ckpt")
+    assert mid.verify_image("ckpt", "step-00000001", deep=True) == []
+    # ...until the dead child's lease expires; then retention reclaims
+    time.sleep(0.25)
+    assert not mid.leased("ckpt", "step-00000001")
+    prune_steps(mid, "ckpt", keep=1)
+    assert set(mid.list_tags("ckpt")) == {"step-00000002"}
+    # the next healthy cycle converges the once-dead child from scratch
+    fan = replicate_fanout(store, [relay], "ckpt", "step-00000003")
+    assert fan.ok and fan.replicas[0].children.ok
+    assert snapshot(edge, "ckpt", "step-00000003") == \
+        snapshot(store, "ckpt", "step-00000003")
+
+
+def test_relay_child_retry_releases_lease_on_convergence(tmp_path, rng):
+    store, mid, edge = (mk(tmp_path, n) for n in ("src", "mid", "edge"))
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    policy = RetryPolicy(seed=2, **FAST)
+    relay = RelayNode(mid, children=[edge], retry=policy)
+    need = delta_blob_hashes(store, edge, "app", "v1")
+    with inject(2, FaultSpec(point="wire.receive_blob", mode="corrupt",
+                             match=f"{edge.root}:{need[0]}")):
+        fan = replicate_fanout(store, [relay], "app", "v1", retry=policy)
+    assert fan.ok and fan.replicas[0].children.n_ok == 1
+    assert fan.replicas[0].children.retries_spent == 1
+    assert not mid.leased("app", "v1")       # released by on_converged
+    assert snapshot(edge, "app", "v1") == snapshot(store, "app", "v1")
+
+
+# ------------------------------------------- batch-durability crash seam
+def test_failed_push_leaves_no_unsynced_adoptable_blobs(tmp_path, rng):
+    """The _BatchScope.__exit__ fix: a push that dies mid-batch must flush
+    the orphans it strands before restoring durability — otherwise a later
+    probe_blobs re-hash adopts blobs whose fsync nobody ever scheduled."""
+    store, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    push_delta(store, dst, "app", "v1")
+    inject_v2_wide(store, payloads)
+    need = delta_blob_hashes(store, dst, "app", "v2")
+    with inject(0, FaultSpec(point="wire.receive_blob", mode="crash",
+                             match=need[34])) as inj:
+        fan = replicate_fanout(store, [dst], "app", "v2")
+    assert not fan.ok and inj.fired() == 1
+    assert fan.replicas[0].stats_partial.blobs_sent >= 32   # real orphans
+    # the crash-mid-batch lock: nothing dirty survives the scope, the
+    # landed orphans were flushed on exit, durability mode restored
+    assert dst._dirty_files == set() and dst._dirty_dirs == set()
+    assert dst.durability == "batch"         # the store's own default
+
+
+def test_adopted_orphans_are_made_durable_on_full_store(tmp_path, rng):
+    """A RESTARTED receiver (fresh instance, durability='full', empty
+    _durable_paths) that adopts a previous crash's orphans must fsync them
+    at adoption — existence is not durability."""
+    store, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(store, payloads)
+    push_delta(store, dst, "app", "v1")
+    inject_v2_wide(store, payloads)
+    with inject(0, FaultSpec(point="wire.commit", mode="crash",
+                             match=dst.root)):
+        fan = replicate_fanout(store, [dst], "app", "v2")
+    assert not fan.ok and not dst.has_image("app", "v2")
+
+    dst2 = LayerStore(str(tmp_path / "dst"), chunk_bytes=512,
+                      durability="full")     # restart analogue
+    before = dst2.fsyncs
+    stats = push_delta(store, dst2, "app", "v2")
+    assert stats.bytes_payload == 0          # pure adoption, no resend
+    assert dst2.fsyncs > before              # adoption scheduled the fsync
+    assert dst2.verify_image("app", "v2", deep=True) == []
+    assert snapshot(dst2, "app", "v2") == snapshot(store, "app", "v2")
+
+
+# ----------------------------------------------------- harness smoke run
+@pytest.mark.parametrize("mode", ["drop", "corrupt", "delay", "crash"])
+def test_chaos_cell_relay(tmp_path, mode):
+    cell = run_cell("relay", mode, seed=11, base_dir=str(tmp_path))
+    assert cell.ok and cell.fired >= 1
+
+
+def test_chaos_cell_failure_prints_repro(tmp_path):
+    from repro.ft import chaos as chaos_mod
+
+    def broken(base_dir, mode, seed):
+        raise AssertionError("deliberately broken cell")
+
+    orig = chaos_mod._RUNNERS["push"]
+    chaos_mod._RUNNERS["push"] = broken
+    try:
+        cells = chaos_mod.run_matrix([3], modes=["drop"],
+                                     scenarios=["push"])
+    finally:
+        chaos_mod._RUNNERS["push"] = orig
+    assert len(cells) == 1 and not cells[0].ok
+    assert "--seeds 3" in cells[0].error and "push" in cells[0].error

@@ -304,17 +304,20 @@ def test_follower_poll_survives_remote_prune_mid_poll(tmp_path, rng,
     params2 = dict(params, w=params["w"] + 1.0)
     mgr.save(1, params2, opt)
 
-    real = engine_mod.pull_delta
+    real = engine_mod.replicate_fanout
 
-    def racing_pull(remote, local, image, tag):
+    def racing_fanout(remote, receivers, image, tag, **kw):
         remote.remove_image(image, tag)       # the trainer's retention ran
         remote.gc()
-        return real(remote, local, image, tag)
+        return real(remote, receivers, image, tag, **kw)
 
-    monkeypatch.setattr(engine_mod, "pull_delta", racing_pull)
+    monkeypatch.setattr(engine_mod, "replicate_fanout", racing_fanout)
     assert fol.poll() is None                 # survived, no exception
     monkeypatch.undo()
     assert fol.last_step == 0                 # nothing was consumed
+    health = fol.health()                     # a clean None-poll is not a
+    assert health.consecutive_failures == 0   # failure, just "up to date"
+    assert health.last_success_step == 0
 
     params3 = dict(params, w=params["w"] + 2.0)
     mgr.save(2, params3, opt)                 # next poll converges
@@ -530,6 +533,69 @@ def test_follower_sparse_falls_back_on_structure_change(tmp_path, rng):
     assert set(_leaves(upd.params)) == {"extra", "w"}
     assert np.array_equal(np.asarray(upd.params["extra"]),
                           params2["extra"])
+
+
+def test_follower_health_and_retry_under_faults(tmp_path, rng):
+    """The structured health snapshot: failures counted with the error
+    recorded ("serving stale weights since step N"), a clean poll resets
+    the run, a transient wire fault converges via the in-run retry and
+    shows up in retries_spent."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+    from repro.ft import FaultSpec, RetryPolicy, inject
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(
+        mgr.store, str(tmp_path / "serve"),
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.001,
+                          max_delay_s=0.01))
+    assert fol.poll().step == 0
+    h = fol.health()
+    assert h.polls == 1 and h.failures == 0 and h.last_success_step == 0
+    assert h.staleness_s is not None and h.staleness_s >= 0.0
+
+    params2 = dict(params, w=params["w"] + 1.0)
+    mgr.save(1, params2, opt)
+    # persistent outage: every poll fails loudly, but the health record
+    # now says "serving stale weights since step 0" instead of nothing
+    with inject(0, FaultSpec(point="follower.pull", mode="drop",
+                             times=None)):
+        for _ in range(2):
+            with pytest.raises(ConnectionError):
+                fol.poll()
+    h = fol.health()
+    assert h.failures == 2 and h.consecutive_failures == 2
+    assert h.last_error is not None and "FaultInjected" in h.last_error
+    assert h.last_success_step == 0           # stale since step 0
+
+    # transient wire fault: the in-run retry converges it within ONE poll
+    with inject(1, FaultSpec(point="wire.negotiate", mode="drop",
+                             match=fol.local.root)):
+        upd = fol.poll()
+    assert upd is not None and upd.step == 1
+    h = fol.health()
+    assert h.consecutive_failures == 0 and h.last_error is None
+    assert h.last_success_step == 1 and h.retries_spent >= 1
+
+
+def test_engine_health_snapshot(rng):
+    params = {"w": rng.standard_normal(8).astype(np.float32)}
+    eng = _mk_engine(params)
+    h = eng.health()
+    assert h.refreshes == 0 and h.staleness_s is None
+    assert h.last_refresh_step is None
+    eng.refresh(params, step=3)
+    h = eng.health()
+    assert h.refreshes == 1 and h.last_refresh_step == 3
+    assert h.staleness_s is not None and h.staleness_s >= 0.0
+    eng.refresh({"w": params["w"] + 1.0}, changed=["w"], step=4)
+    h2 = eng.health()
+    assert h2.refreshes == 2 and h2.last_refresh_step == 4
+    assert h2.last_refresh_leaves == 1
 
 
 def test_diff_tensor_records_plan(tmp_path, rng):

@@ -97,6 +97,38 @@ def test_watchdog_fires_and_disarms():
     assert fired == [1]                  # disarmed in time
 
 
+def test_watchdog_disarm_fire_race():
+    """Regression: a timer firing CONCURRENTLY with disarm() must not run
+    on_timeout or set ``fired`` after disarm returns. With a near-zero
+    timeout the timer thread races every disarm; the generation token
+    makes the disarm win deterministically. Hammered many rounds — before
+    the lock+token fix this flaked within a few hundred iterations."""
+    late = []
+    for i in range(300):
+        wd = Watchdog(1e-4, lambda i=i: late.append(i))
+        wd.arm()
+        wd.disarm()
+        # once disarm() returned, the contract is final: no late callback,
+        # no late flag — even though the Timer thread may still be alive
+        assert not wd.fired, f"round {i}: fired set after disarm returned"
+    time.sleep(0.05)                     # let any stale timers drain
+    assert late == [], f"on_timeout ran after disarm: rounds {late[:5]}"
+
+
+def test_watchdog_rearm_generation_isolation():
+    """arm() after a pending fire must fence the OLD timer: only the new
+    generation may fire, and a genuine timeout still works."""
+    fired = []
+    wd = Watchdog(1e-4, lambda: fired.append("old"))
+    wd.arm()
+    wd.disarm()
+    wd.timeout = 0.05
+    wd.on_timeout = lambda: fired.append("new")
+    wd.arm()
+    time.sleep(0.15)
+    assert fired == ["new"] and wd.fired
+
+
 def test_shrink_mesh_shape():
     assert shrink_mesh_shape(256, model=16) == (16, 16)
     assert shrink_mesh_shape(240, model=16) == (15, 16)

@@ -1,0 +1,144 @@
+"""Property tests for ft.retry.RetryPolicy — the backoff-schedule and
+quarantine guarantees the chaos harness leans on: monotone pre-jitter
+schedule, jitter bounded and deterministic under a fixed seed, deadline
+containment (no sleep ever starts that the deadline can't contain), and
+quarantine after EXACTLY max_attempts."""
+import pytest
+
+from conftest import max_examples
+from repro.ft import RetryExhausted, RetryPolicy
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+policies = st.builds(
+    RetryPolicy,
+    max_attempts=st.integers(1, 8),
+    base_delay_s=st.floats(0.0, 2.0, allow_nan=False),
+    max_delay_s=st.floats(0.0, 10.0, allow_nan=False),
+    multiplier=st.floats(1.0, 8.0, allow_nan=False),
+    jitter=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**32 - 1),
+)
+
+
+@settings(max_examples=max_examples(200), deadline=None)
+@given(policy=policies, n=st.integers(0, 30))
+def test_schedule_monotone_and_capped(policy, n):
+    """The pre-jitter schedule never decreases with the attempt number and
+    never exceeds the cap."""
+    assert policy.schedule(n) <= policy.schedule(n + 1) or \
+        policy.schedule(n) == policy.max_delay_s
+    assert 0.0 <= policy.schedule(n) <= policy.max_delay_s
+    assert policy.schedule(n + 1) >= min(policy.base_delay_s,
+                                         policy.max_delay_s)
+
+
+@settings(max_examples=max_examples(200), deadline=None)
+@given(policy=policies, n=st.integers(0, 30))
+def test_backoff_bounded_by_jitter_band(policy, n):
+    """The actual (jittered) delay lives in [schedule, schedule*(1+jitter)]
+    — jitter only ever ADDS bounded spread, never undercuts the schedule."""
+    s, b = policy.schedule(n), policy.backoff(n)
+    assert s <= b <= s * (1.0 + policy.jitter) + 1e-12
+
+
+@settings(max_examples=max_examples(100), deadline=None)
+@given(policy=policies)
+def test_backoff_deterministic_under_seed(policy):
+    """Same seed => bit-identical delay sequence (the chaos harness replay
+    guarantee); a different seed with nonzero jitter on an uncapped,
+    nonzero schedule almost always differs somewhere."""
+    twin = RetryPolicy(**{**policy.__dict__})
+    assert [policy.backoff(n) for n in range(10)] == \
+        [twin.backoff(n) for n in range(10)]
+
+
+@settings(max_examples=max_examples(150), deadline=None)
+@given(policy=policies)
+def test_quarantine_after_exactly_max_attempts(policy):
+    """A function that always fails is called exactly max_attempts times,
+    then quarantined — never one more, never one fewer, regardless of the
+    backoff shape. (Simulated clock/sleep: no real waiting.)"""
+    calls = []
+    now = [0.0]
+
+    def fn(attempt):
+        calls.append(attempt)
+        raise ValueError(f"boom {attempt}")
+
+    result, health = policy.execute(
+        fn, sleep=lambda s: now.__setitem__(0, now[0] + s),
+        clock=lambda: now[0])
+    assert result is None
+    assert calls == list(range(1, policy.max_attempts + 1))
+    assert health.quarantined and not health.succeeded
+    assert health.attempts == policy.max_attempts
+    assert health.retries == policy.max_attempts - 1
+    assert len(health.errors) == policy.max_attempts
+
+
+@settings(max_examples=max_examples(150), deadline=None)
+@given(policy=policies, deadline_s=st.floats(0.0, 5.0, allow_nan=False),
+       fail_n=st.integers(0, 10))
+def test_deadline_contains_every_sleep(policy, deadline_s, fail_n):
+    """With a deadline, no backoff sleep is ever STARTED that would
+    overrun it: simulated total sleep stays within the deadline, and a
+    deadline stop is flagged as such."""
+    policy = RetryPolicy(**{**policy.__dict__, "deadline_s": deadline_s})
+    now = [0.0]
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        now[0] += s
+
+    def fn(attempt):
+        if attempt <= fail_n:
+            raise ValueError("transient")
+        return "ok"
+
+    result, health = policy.execute(fn, sleep=sleep, clock=lambda: now[0])
+    assert sum(slept) <= deadline_s + 1e-9
+    assert health.backoff_total_s == sum(slept)
+    if health.deadline_exceeded:
+        # stopped early: the NEXT backoff would have overrun the deadline
+        assert result is None and health.quarantined
+        assert health.attempts < policy.max_attempts
+        assert now[0] + policy.backoff(health.attempts - 1) > deadline_s
+
+
+@settings(max_examples=max_examples(100), deadline=None)
+@given(policy=policies, fail_n=st.integers(0, 10))
+def test_succeeds_iff_failures_fit_in_budget(policy, fail_n):
+    """fn failing its first ``fail_n`` calls succeeds exactly when
+    fail_n < max_attempts (no deadline): success on attempt fail_n+1."""
+    now = [0.0]
+
+    def fn(attempt):
+        if attempt <= fail_n:
+            raise ValueError("transient")
+        return attempt
+
+    result, health = policy.execute(
+        fn, sleep=lambda s: now.__setitem__(0, now[0] + s),
+        clock=lambda: now[0])
+    if fail_n < policy.max_attempts:
+        assert health.succeeded and result == fail_n + 1
+        assert health.attempts == fail_n + 1
+    else:
+        assert health.quarantined and result is None
+        assert health.attempts == policy.max_attempts
+
+
+def test_run_raises_retry_exhausted_with_health():
+    policy = RetryPolicy(max_attempts=2, base_delay_s=0.0)
+
+    def fn(attempt):
+        raise ValueError("always")
+
+    with pytest.raises(RetryExhausted) as ei:
+        policy.run(fn)
+    assert ei.value.health.attempts == 2
+    assert "always" in ei.value.health.errors[-1]
