@@ -1,0 +1,163 @@
+"""CI docs gate: keep README.md / docs/*.md honest.
+
+    python -m benchmarks.check_docs
+
+Three classes of drift, all exact and dependency-free:
+
+1. **Dangling internal links** — every relative markdown link target in
+   README.md and docs/*.md must exist on disk (anchors and external URLs
+   are skipped).
+2. **Bench-table ↔ baseline drift** — every ``BENCH_*.json`` a doc names
+   must exist at the repo root AND be registered in
+   ``benchmarks.run.BASELINES``; conversely, every registered baseline
+   must be documented in the README bench table. Adding a bench without
+   a doc row (or deleting one without pruning the docs) fails CI.
+3. **Stale headline numbers** — the README's quantitative claims rest on
+   committed baseline metrics; ``CLAIMS`` pins each claim to the metric
+   range it paraphrases. When an intentional perf change moves a
+   baseline outside the range (``--update-baseline``), this gate forces
+   the prose to be updated in the same PR instead of drifting quietly.
+
+Runs in the lint job (no benchmark execution needed — it reads only the
+COMMITTED baselines and the docs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ["README.md"]
+
+# (claim shown on failure, baseline file, dotted metric path, lo, hi) —
+# the committed metric must satisfy lo <= value <= hi (None = unbounded).
+# Ranges are what the README PROSE promises, not the CI perf gate: wider
+# than check_regression's thresholds, tight enough that the text would
+# read as wrong outside them.
+CLAIMS = [
+    ("README: incremental save '~2.5-3.5x wall'",
+     "BENCH_incremental_save.json", "speedup", 2.0, 4.5),
+    ("README: multilayer inject 'k=8: ~3.4-3.9x wall'",
+     "BENCH_multilayer_inject.json", "k8.speedup_wall", 3.0, 4.5),
+    ("README: delta push 'k=8: ~4x wall'",
+     "BENCH_push_delta.json", "k8.speedup_wall", 3.0, 5.5),
+    ("README: delta push 'wire bytes ~= 1.08x changed bytes'",
+     "BENCH_push_delta.json", "k8.delta.wire_amplification", 1.0, 1.15),
+    ("README: fanout 'per-replica wire <= 1.25x changed bytes'",
+     "BENCH_fanout.json", "N4.within_budget", True, True),
+    ("README: fanout 'Engine.refresh puts 16/512 leaves'",
+     "BENCH_fanout.json", "N4.refresh.refresh_only_changed", True, True),
+    ("README/ARCHITECTURE: multitenant 'ZERO base-blob transfers'",
+     "BENCH_multitenant.json", "fleet.zero_base_blob_transfers",
+     True, True),
+    ("README/ARCHITECTURE: multitenant 'wire and disk <= 1.25x'",
+     "BENCH_multitenant.json", "consolidation.wire_within_budget",
+     True, True),
+    ("README/ARCHITECTURE: multitenant 'gc sweeps EXACTLY'",
+     "BENCH_multitenant.json", "gc.exact", True, True),
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_BENCH = re.compile(r"\bBENCH_[A-Za-z0-9_]+\.json\b")
+
+
+def _doc_paths() -> list[str]:
+    docs = [os.path.join(REPO_ROOT, f) for f in DOC_FILES]
+    docs_dir = os.path.join(REPO_ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        docs.extend(os.path.join(docs_dir, f)
+                    for f in sorted(os.listdir(docs_dir))
+                    if f.endswith(".md"))
+    return [d for d in docs if os.path.exists(d)]
+
+
+def _dig(data, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(data, dict) or part not in data:
+            return None
+        data = data[part]
+    return data
+
+
+def check_links(problems: list) -> None:
+    for doc in _doc_paths():
+        rel_doc = os.path.relpath(doc, REPO_ROOT)
+        with open(doc) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = os.path.normpath(
+                os.path.join(os.path.dirname(doc),
+                             target.split("#", 1)[0]))
+            if not os.path.exists(path):
+                problems.append(f"{rel_doc}: dangling link -> {target}")
+
+
+def check_bench_tables(problems: list) -> None:
+    sys.path.insert(0, REPO_ROOT)
+    from benchmarks.run import BASELINES
+    registered = set(BASELINES.values())
+
+    mentioned: set = set()
+    for doc in _doc_paths():
+        rel_doc = os.path.relpath(doc, REPO_ROOT)
+        with open(doc) as f:
+            names = set(_BENCH.findall(f.read()))
+        mentioned |= names
+        for name in sorted(names):
+            if not os.path.exists(os.path.join(REPO_ROOT, name)):
+                problems.append(f"{rel_doc}: references {name} but it is "
+                                "not committed at the repo root")
+            if name not in registered:
+                problems.append(f"{rel_doc}: references {name} but "
+                                "benchmarks.run.BASELINES does not "
+                                "produce it")
+    for name in sorted(registered - mentioned):
+        problems.append(f"BASELINES produces {name} but no doc mentions "
+                        "it — add a bench-table row")
+
+
+def check_claims(problems: list) -> None:
+    for claim, base_name, dotted, lo, hi in CLAIMS:
+        path = os.path.join(REPO_ROOT, base_name)
+        if not os.path.exists(path):
+            problems.append(f"{claim}: baseline {base_name} missing")
+            continue
+        with open(path) as f:
+            got = _dig(json.load(f), dotted)
+        if got is None:
+            problems.append(f"{claim}: metric {dotted!r} not found in "
+                            f"{base_name}")
+        elif isinstance(lo, bool):
+            if got is not lo:
+                problems.append(f"{claim}: {base_name}:{dotted} = {got}, "
+                                f"doc claims {lo}")
+            else:
+                print(f"OK         {base_name}:{dotted} = {got}")
+        elif not (lo <= got <= hi):
+            problems.append(f"{claim}: {base_name}:{dotted} = {got:.3f} "
+                            f"outside documented range [{lo}, {hi}] — "
+                            "update the prose with the baseline")
+        else:
+            print(f"OK         {base_name}:{dotted} = {round(got, 3)}")
+
+
+def main() -> int:
+    problems: list = []
+    check_links(problems)
+    check_bench_tables(problems)
+    check_claims(problems)
+    if problems:
+        print("\nFAIL:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("\ndocs gate: all links resolve, bench tables match baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -112,6 +112,22 @@ INVARIANTS = [
     # ... and every edge ends bit-identical to the trainer's save
     ("relay.json", "C2.edges_bit_identical", True),
     ("relay.json", "C4.edges_bit_identical", True),
+    # cross-image blob universe (multi-tenant fleet): a fresh fine-tune
+    # fanned to base-holding replicas ships only the adapter delta — the
+    # sibling image vouches for every backbone blob (counter-proved: zero
+    # base-blob reads at the source) ...
+    ("multitenant.json", "fleet.negotiation_rounds", 1),
+    ("multitenant.json", "fleet.zero_base_blob_transfers", True),
+    ("multitenant.json", "fleet.within_budget", True),
+    # ... consolidating base + T tenants onto one remote stays within
+    # 1.25x (base + sum-of-adapters) in wire AND remote disk ...
+    ("multitenant.json", "consolidation.wire_within_budget", True),
+    ("multitenant.json", "consolidation.disk_within_budget", True),
+    # ... and cross-image gc() removes EXACTLY the unreachable blobs:
+    # shared base blobs survive removal of T-1 tenant images
+    ("multitenant.json", "gc.exact", True),
+    ("multitenant.json", "gc.base_survives", True),
+    ("multitenant.json", "gc.survivors_verify_clean", True),
 ]
 
 

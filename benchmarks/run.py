@@ -913,6 +913,174 @@ def bench_relay(trials: int) -> dict:
     return out
 
 
+def bench_multitenant(trials: int) -> dict:
+    """Cross-image blob universe (the fleet-of-fine-tunes topology): T
+    tenant images forked from ONE base (shared backbone layers, per-tenant
+    adapter), stored and replicated in a single cross-image namespace.
+    Gated claims, all counter-proved against instrumented stores:
+
+    * pushing a fresh tenant to a replica that holds only the BASE image
+      ships only the adapter delta — ZERO base/backbone blobs are read at
+      the source or cross the wire (the sibling image vouches for them);
+    * consolidating base + T tenants onto one remote costs, in wire AND
+      in remote disk, at most 1.25x (base bytes + sum of adapter bytes) —
+      tenants dedup against the base and against each other;
+    * cross-image ``gc()`` is exact: removing T-1 tenant images sweeps
+      precisely their exclusive adapter blobs, and every blob the base
+      (or the surviving tenant) reaches stays on disk.
+    """
+    from repro.core import Instruction, LayerStore, push_delta, \
+        replicate_fanout
+    from .scenarios import _gen
+
+    T, R = 4, 2                         # tenants, base-holding replicas
+    n_backbone, leaves_per_layer = 4, 8
+    leaf_bytes = chunk_bytes = 128 << 10
+    adapter_leaves = 2
+
+    ins = [Instruction("FROM", "base", "config")]
+    backbone = {}
+    for i in range(n_backbone):
+        key = f"backbone{i}"
+        ins.append(Instruction("COPY", key, "content"))
+        backbone[key] = {f"B{i}/l{j:03d}": _gen(7000 + i * 64 + j,
+                                                leaf_bytes)
+                         for j in range(leaves_per_layer)}
+    ins.append(Instruction("COPY", "adapter", "content"))
+    ins.append(Instruction("CMD", "serve", "config"))
+
+    def adapter_payload(t):
+        return {f"A/l{j}": _gen(9000 + t * 16 + j, leaf_bytes)
+                for j in range(adapter_leaves)}
+
+    def image_chunks(store, name, tag="v1"):
+        m, _ = store.read_image(name, tag)
+        return {h for lid in m.layer_ids
+                for rec in store.read_layer(lid).records
+                for h in rec.chunks}
+
+    def blob_bytes(store, chunks):
+        return sum(len(store.read_blob(h)) for h in chunks)
+
+    def disk_blob_bytes(store):
+        total = 0
+        for dirpath, _, files in os.walk(os.path.join(store.root, "blobs")):
+            total += sum(os.path.getsize(os.path.join(dirpath, f))
+                         for f in files)
+        return total
+
+    out = {"tenants": T, "replicas": R, "backbone_layers": n_backbone,
+           "leaf_bytes": leaf_bytes, "chunk_bytes": chunk_bytes,
+           "trials": trials}
+    root = tempfile.mkdtemp(prefix="lc_mt_")
+    try:
+        src = LayerStore(os.path.join(root, "src"),
+                         chunk_bytes=chunk_bytes,
+                         record_fingerprints=False)
+        prov = {key: (lambda v=v: v) for key, v in backbone.items()}
+        base_ad = adapter_payload(0)
+        prov["adapter"] = lambda: base_ad
+        src.build_image("base", "v1", ins, prov)
+        base_chunks = image_chunks(src, "base")
+        base_bytes = blob_bytes(src, base_chunks)
+
+        tenant_chunks = {}
+        for t in range(1, T + 1):
+            ad = adapter_payload(t)
+            tprov = dict(prov)
+            tprov["adapter"] = lambda v=ad: v
+            _, _, rep = src.build_image(f"tenant{t}", "v1", ins, tprov,
+                                        parent=("base", "v1"))
+            assert rep.layers_cached >= n_backbone + 1   # FROM + backbone
+            tenant_chunks[t] = image_chunks(src, f"tenant{t}")
+        adapter_chunks = {t: tenant_chunks[t] - base_chunks
+                          for t in tenant_chunks}
+        adapter_bytes = {t: blob_bytes(src, adapter_chunks[t])
+                         for t in adapter_chunks}
+
+        # -- fleet arm: per-tenant fan-out to R base-holding replicas ----
+        replicas = [LayerStore(os.path.join(root, f"r{i}"),
+                               chunk_bytes=chunk_bytes,
+                               record_fingerprints=False)
+                    for i in range(R)]
+        for r in replicas:
+            push_delta(src, r, "base", "v1")
+
+        fan_t, amp = [], []
+        rounds_ok = zero_base = True
+        orig_read = src.read_blob
+        for t in range(1, T + 1):
+            reads = []
+            src.read_blob = lambda h: (reads.append(h), orig_read(h))[1]
+            t0 = time.perf_counter()
+            fan = replicate_fanout(src, replicas, f"tenant{t}", "v1")
+            fan_t.append(time.perf_counter() - t0)
+            del src.read_blob
+            assert fan.ok, [r.error for r in fan.replicas]
+            rounds_ok &= fan.negotiation_rounds == 1
+            # the counter-proof: NOT ONE backbone blob was even read
+            zero_base &= not (set(reads) & base_chunks)
+            zero_base &= set(reads) == adapter_chunks[t]
+            amp.append(max(r.stats.bytes_sent for r in fan.replicas)
+                       / max(adapter_bytes[t], 1))
+        amp_max = float(np.max(np.asarray(amp)))
+        out["fleet"] = {
+            "negotiation_rounds": 1 if rounds_ok else -1,
+            "zero_base_blob_transfers": bool(zero_base),
+            "wire_amplification_max": amp_max,
+            "within_budget": bool(amp_max <= 1.25),
+            "per_tenant_median_s": float(np.median(np.asarray(fan_t))),
+            "adapter_bytes": adapter_bytes[1],
+            "base_bytes": base_bytes,
+        }
+        print(f"multitenant_fleet,{np.median(np.asarray(fan_t)) * 1e6:.1f},"
+              f"T={T} zero_base={zero_base} amp={amp_max:.3f}")
+
+        # -- consolidation arm: base + T tenants onto ONE empty remote ---
+        remote = LayerStore(os.path.join(root, "remote"),
+                            chunk_bytes=chunk_bytes,
+                            record_fingerprints=False)
+        wire = push_delta(src, remote, "base", "v1").bytes_sent
+        for t in range(1, T + 1):
+            wire += push_delta(src, remote, f"tenant{t}", "v1").bytes_sent
+        budget = base_bytes + sum(adapter_bytes.values())
+        disk = disk_blob_bytes(remote)
+        out["consolidation"] = {
+            "wire_total": wire,
+            "disk_blob_bytes": disk,
+            "budget_bytes": budget,
+            "wire_amplification": wire / budget,
+            "disk_amplification": disk / budget,
+            "wire_within_budget": bool(wire <= 1.25 * budget),
+            "disk_within_budget": bool(disk <= 1.25 * budget),
+        }
+        print(f"multitenant_consolidation,wire={wire},"
+              f"amp={wire / budget:.3f} disk_amp={disk / budget:.3f}")
+
+        # -- gc arm: drop T-1 tenants at the remote, sweep exactly -------
+        survivors = base_chunks | tenant_chunks[T]
+        expected = len(set().union(*(adapter_chunks[t]
+                                     for t in range(1, T))) - survivors)
+        for t in range(1, T):
+            assert remote.remove_image(f"tenant{t}", "v1")
+        stats = remote.gc()
+        base_ok = all(remote.has_blob(h) for h in survivors)
+        out["gc"] = {
+            "blobs_swept": stats["blobs_swept"],
+            "blobs_expected": expected,
+            "exact": bool(stats["blobs_swept"] == expected),
+            "base_survives": bool(base_ok),
+            "survivors_verify_clean": bool(
+                remote.verify_image("base", "v1", deep=True) == [] and
+                remote.verify_image(f"tenant{T}", "v1", deep=True) == []),
+        }
+        print(f"multitenant_gc,swept={stats['blobs_swept']},"
+              f"expected={expected} base_survives={base_ok}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
 def bench_fingerprint(trials: int) -> dict:
     """Change-detector throughput: host SHA-256 vs on-device fingerprint
     (jnp path; the Pallas kernel is the TPU-target implementation)."""
@@ -964,6 +1132,7 @@ BASELINES = {
     "push_delta": "BENCH_push_delta.json",
     "fanout": "BENCH_fanout.json",
     "relay": "BENCH_relay.json",
+    "multitenant": "BENCH_multitenant.json",
 }
 
 
@@ -990,6 +1159,7 @@ def main() -> None:
         "push_delta": lambda: bench_push_delta(max(trials // 3, 5)),
         "fanout": lambda: bench_fanout(max(trials // 3, 5)),
         "relay": lambda: bench_relay(max(trials // 3, 5)),
+        "multitenant": lambda: bench_multitenant(max(trials // 3, 3)),
         "fingerprint": lambda: bench_fingerprint(trials),
         "roofline": bench_roofline,
     }

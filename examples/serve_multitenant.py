@@ -1,7 +1,10 @@
-"""Multi-tenant serving with layer dedup — Docker's `FROM ubuntu` reuse for
-model weights: N fine-tuned variants share base layers in one store; each
-variant costs O(its delta) in storage, and switching variants reloads only
-changed chunks.
+"""Multi-tenant fleet serving with a cross-image blob universe — Docker's
+`FROM ubuntu` reuse for model weights, end to end: T fine-tuned variants
+are separate IMAGES forked from one base (`CheckpointManager(image=...,
+base_image=..., store=...)`), sharing base layers in one store; each
+tenant costs O(its adapter) in storage, and `replicate_fanout` to serving
+replicas that already hold the base ships ONLY the adapter delta — the
+`FanoutStats` wire accounting printed below proves it.
 
     PYTHONPATH=src python examples/serve_multitenant.py
 """
@@ -17,13 +20,14 @@ import numpy as np
 
 from repro.ckpt import CheckpointManager, CheckpointPolicy
 from repro.configs import get_smoke_config
+from repro.core import LayerStore, push_delta, replicate_fanout
 from repro.models import init_params
 from repro.serve import Engine
 
 
-def store_bytes(mgr):
+def blob_bytes(root):
     total = 0
-    for dp, _, fs in os.walk(os.path.join(mgr.store.root, "blobs")):
+    for dp, _, fs in os.walk(os.path.join(root, "blobs")):
         for f in fs:
             total += os.path.getsize(os.path.join(dp, f))
     return total
@@ -33,40 +37,78 @@ def main():
     cfg = get_smoke_config("mixtral-8x7b")
     base = init_params(cfg, jax.random.PRNGKey(0))
     root = tempfile.mkdtemp(prefix="lc_tenants_")
-    mgr = CheckpointManager(root, cfg.name,
-                            CheckpointPolicy(incremental=True,
-                                             async_write=False, keep=100))
-    mgr.save(0, base, {"step": jnp.int32(0)})
-    b0 = store_bytes(mgr)
+    policy = CheckpointPolicy(incremental=True, async_write=False, keep=100)
+
+    # ---- the trainer side: one base image, T tenant images, ONE store
+    base_mgr = CheckpointManager(os.path.join(root, "train"), cfg.name,
+                                 policy, image="base-model")
+    base_mgr.save(0, base, {"step": jnp.int32(0)})
+    tag = base_mgr.tag_of(0)
+    store = base_mgr.store
+    b0 = blob_bytes(store.root)
     print(f"base image: {b0 / 1e6:.2f} MB")
 
-    # three tenants fine-tune different tiny pieces
-    tenants = {}
     deltas = [("final_norm", lambda p: p["final_norm"] * 2.0),
               ("embed", lambda p: p["embed"] + 0.5 * jnp.sign(p["embed"])),
               ("final_norm", lambda p: p["final_norm"] * 0.5)]
+    tenant_mgrs = {}
     for i, (leaf, fn) in enumerate(deltas, start=1):
         variant = dict(base)
         variant[leaf] = fn(base)
-        before = store_bytes(mgr)
-        mgr.save(i, variant, {"step": jnp.int32(i)})
-        tenants[f"tenant{i}"] = i
-        print(f"tenant{i}: +{(store_bytes(mgr) - before) / 1e3:.1f} KB "
-              f"(delta on '{leaf}')")
+        mgr = CheckpointManager("", cfg.name, policy,
+                                image=f"tenant{i}",
+                                base_image=("base-model", tag),
+                                store=store)     # the shared blob universe
+        before = blob_bytes(store.root)
+        rep = mgr.save(0, variant, {"step": jnp.int32(0)})
+        tenant_mgrs[f"tenant{i}"] = mgr
+        print(f"tenant{i}: +{(blob_bytes(store.root) - before) / 1e3:.1f} KB"
+              f" on disk (delta on '{leaf}', "
+              f"{rep.layers_cached} base layers reused by id)")
 
     naive = b0 * (1 + len(deltas))
-    print(f"store total: {store_bytes(mgr) / 1e6:.2f} MB "
+    print(f"store total: {blob_bytes(store.root) / 1e6:.2f} MB "
           f"(naive per-tenant copies: {naive / 1e6:.2f} MB)")
 
-    # serve two tenants and show they diverge from the same prompts
+    # ---- the fleet side: replicas are pre-seeded with the BASE image
+    # only; fanning each tenant to them ships just the adapter delta,
+    # because the have-set answers from the replica's whole committed
+    # namespace (the base image vouches for every backbone blob).
+    replicas = [LayerStore(os.path.join(root, f"replica{j}"))
+                for j in range(2)]
+    for r in replicas:
+        seeded = push_delta(store, r, "base-model", tag)
+        print(f"seed {os.path.basename(r.root)} with base: "
+              f"{seeded.bytes_sent / 1e6:.2f} MB on the wire")
+
+    for name in tenant_mgrs:
+        before = [blob_bytes(r.root) for r in replicas]
+        fan = replicate_fanout(store, replicas, name, tag)
+        assert fan.ok, [r.error for r in fan.replicas]
+        wire = max(r.stats.bytes_sent for r in fan.replicas)
+        disk = max(blob_bytes(r.root) - b for r, b in zip(replicas, before))
+        print(f"fan {name} -> {len(replicas)} base-holding replicas: "
+              f"rounds={fan.negotiation_rounds} "
+              f"source_reads={fan.source_blob_reads} "
+              f"wire<= {wire / 1e3:.1f} KB/replica "
+              f"disk<= {disk / 1e3:.1f} KB/replica "
+              f"(base would be {b0 / 1e6:.2f} MB)")
+
+    # ---- the serving side: two tenants served FROM A REPLICA diverge on
+    # the same prompts (each replica now holds base + all tenants,
+    # deduped in its own cross-image store)
     prompts = np.asarray(jax.random.randint(
         jax.random.PRNGKey(7), (2, 12), 0, cfg.vocab))
-    outs = {}
-    for name, step in list(tenants.items())[:2]:
-        p, _, _ = mgr.restore(step)
-        eng = Engine(cfg, jax.tree.map(jnp.asarray, p), max_len=48)
-        outs[name] = eng.generate(prompts, steps=8).tokens
-        print(f"{name} serve:", outs[name][0].tolist())
+    serve_store = replicas[0]
+    for name in list(tenant_mgrs)[:2]:
+        flat = serve_store.load_image_payload(name, tag)
+        from repro.ckpt.manager import unflatten_tree
+        tree = unflatten_tree({k[len("params/"):]: v
+                               for k, v in flat.items()
+                               if k.startswith("params/")})
+        eng = Engine(cfg, jax.tree.map(jnp.asarray, tree), max_len=48)
+        toks = eng.generate(prompts, steps=8).tokens
+        print(f"{name} serve:", toks[0].tolist())
     print("multitenant OK")
 
 

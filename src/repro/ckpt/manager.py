@@ -177,13 +177,35 @@ class CheckpointPolicy:
 
 
 class CheckpointManager:
+    """See module docstring. Multi-tenant form: ``image=`` names this
+    manager's image (default ``"ckpt"``), and several managers may share
+    ONE ``LayerStore`` (pass ``store=``; ``root`` is then ignored) — the
+    cross-image blob universe, where tenant checkpoints dedup against each
+    other and against a shared base. ``base_image=("name", "tag")`` forks
+    this manager's FIRST save from another image in the same store: the
+    build runs with that image as its DLC cache parent, so unchanged
+    layers reuse the base's layer ids outright — which is exactly what
+    lets ``replicate``/``replicate_fanout`` later ship only the adapter
+    delta to replicas that already hold the base image. Retention
+    (``prune_steps`` + the store-wide ``gc()``) is per image but
+    cross-image safe: pruning one tenant never sweeps blobs a sibling
+    image still reaches."""
+
     IMAGE = "ckpt"
 
     def __init__(self, root: str, arch: str,
-                 policy: Optional[CheckpointPolicy] = None):
+                 policy: Optional[CheckpointPolicy] = None,
+                 image: Optional[str] = None,
+                 base_image: Optional[Tuple[str, str]] = None,
+                 store: Optional[LayerStore] = None):
         self.policy = policy or CheckpointPolicy()
-        self.store = LayerStore(root, chunk_bytes=self.policy.chunk_bytes,
-                                durability=self.policy.durability)
+        # a shared store keeps ITS chunking/durability: tenants of one
+        # universe must agree on chunk geometry or dedup silently dies
+        self.store = store if store is not None else LayerStore(
+            root, chunk_bytes=self.policy.chunk_bytes,
+            durability=self.policy.durability)
+        self.image = image or self.IMAGE
+        self.base_image = base_image
         self.arch = arch
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[Future] = None
@@ -223,7 +245,7 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         # list_tags is cached in the store (invalidated at the manifest
         # commit / image removal), so polling this every save is free.
-        return latest_step(self.store, self.IMAGE)
+        return latest_step(self.store, self.image)
 
     def wait(self) -> Optional[BuildReport]:
         if self._pending is not None:
@@ -270,12 +292,13 @@ class CheckpointManager:
                    fps: Optional[Dict[str, np.ndarray]] = None
                    ) -> BuildReport:
         prev = self.latest_step()
-        parent = (self.IMAGE, self.tag_of(prev)) if prev is not None else None
+        parent = (self.image, self.tag_of(prev)) if prev is not None \
+            else self.base_image
         providers = {k: (lambda p=v: p) for k, v in payloads.items()}
         ins = self._instructions()
         ins[-1] = Instruction("ENV", f"meta step={step}", "config")
         _, _, report = self.store.build_image(
-            self.IMAGE, self.tag_of(step), ins, providers, parent=parent,
+            self.image, self.tag_of(step), ins, providers, parent=parent,
             arch=self.arch)
         if self.policy.use_fingerprints:
             # bootstrap the change detector for the NEXT incremental save
@@ -295,7 +318,7 @@ class CheckpointManager:
         fsync of the batch to that commit point), with per-layer cost
         attribution in ``BuildReport.per_layer``."""
         prev = self.latest_step()
-        manifest, _ = self.store.read_image(self.IMAGE, self.tag_of(prev))
+        manifest, _ = self.store.read_image(self.image, self.tag_of(prev))
         stats: dict = {}
         new_fps: Dict[str, np.ndarray] = {}
         if self.policy.use_fingerprints:
@@ -310,7 +333,7 @@ class CheckpointManager:
             # one batched transaction under the POLICY's durability mode
             # (batch = one deferred fsync flush at the manifest commit)
             _, _, report = inject_image_multi(
-                self.store, self.IMAGE, self.tag_of(prev),
+                self.store, self.image, self.tag_of(prev),
                 self.tag_of(step), diffs,
                 providers={k: (lambda p=v: p) for k, v in payloads.items()},
                 durability=self.policy.durability)
@@ -328,7 +351,7 @@ class CheckpointManager:
         """Retention (see ``prune_steps``). Runs post-commit on the save
         thread, so no batch transaction is open; LayerStore.gc additionally
         refuses to sweep anything still dirty in an open one."""
-        prune_steps(self.store, self.IMAGE, self.policy.keep)
+        prune_steps(self.store, self.image, self.policy.keep)
 
     # --------------------------------------------------------- replication
     def replicate(self, remote=None, step: Optional[int] = None,
@@ -400,7 +423,7 @@ class CheckpointManager:
                 list(remote) if isinstance(remote, (list, tuple)) else [remote])
             return replicate_fanout(
                 self.store, [as_store(r) for r in plain] + relays,
-                self.IMAGE, self.tag_of(step), source=source)
+                self.image, self.tag_of(step), source=source)
         if isinstance(remote, (list, tuple)):
             # source re-modes RelayNodes the caller put in the list; with
             # none present it would be a silent no-op, so reject it the
@@ -410,19 +433,19 @@ class CheckpointManager:
                 raise ValueError("source= only applies to relay "
                                  "topologies; no relay in the remote list")
             return replicate_fanout(self.store, [as_store(r) for r in remote],
-                                    self.IMAGE, self.tag_of(step),
+                                    self.image, self.tag_of(step),
                                     source=source)
         if source is not None and not isinstance(remote, RelayNode):
             raise ValueError("source= only applies to relay topologies; a "
                              "plain remote has no re-fan to mode")
         if isinstance(remote, RelayNode):
-            fan = replicate_fanout(self.store, [remote], self.IMAGE,
+            fan = replicate_fanout(self.store, [remote], self.image,
                                    self.tag_of(step), source=source)
             rep = fan.replicas[0]
             if rep.exception is not None:
                 raise rep.exception
             return fan
-        return push_delta(self.store, as_store(remote), self.IMAGE,
+        return push_delta(self.store, as_store(remote), self.image,
                           self.tag_of(step))
 
     # ------------------------------------------------------------ restore
@@ -432,7 +455,7 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             return None
-        flat = self.store.load_image_payload(self.IMAGE, self.tag_of(step))
+        flat = self.store.load_image_payload(self.image, self.tag_of(step))
         opt_flat = {k[len("opt/"):]: v for k, v in flat.items()
                     if k.startswith("opt/")}
         saved_step = int(opt_flat.pop("__step__")[0])

@@ -25,7 +25,7 @@ from .registry import (DeltaReceiver, FanoutStats, HaveSet, PushRejected,
                        PushStats, RelayNode, ReplicaResult, export_delta,
                        import_delta, pull, pull_delta, push, push_delta,
                        replicate_fanout)
-from .store import BuildReport, LayerStore
+from .store import BuildReport, HoldingsIndex, LayerStore
 
 __all__ = [
     "DEFAULT_CHUNK_BYTES", "TensorRecord", "bytes_to_tensor", "chunk_tensor",
@@ -45,5 +45,5 @@ __all__ = [
     "DeltaReceiver", "FanoutStats", "HaveSet", "PushRejected", "PushStats",
     "RelayNode", "ReplicaResult", "export_delta", "import_delta", "pull",
     "pull_delta", "push", "push_delta", "replicate_fanout",
-    "BuildReport", "LayerStore",
+    "BuildReport", "HoldingsIndex", "LayerStore",
 ]

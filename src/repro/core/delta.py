@@ -13,7 +13,9 @@ Wire layout (``encode_delta``/``decode_delta``)::
     b"RDB1" | uint64 header_len | header JSON | blob payloads (index order)
 
 The header carries the manifest, config, layer descriptors, the re-key
-table ({new_layer_id: remote_layer_id} for content-identical clones) and a
+table ({new_layer_id: remote_layer_id} for content-identical clones), the
+cross-image base hints (``base_images`` — sibling images the delta was
+computed against, e.g. the base model a fine-tune forked from) and a
 blob index [[sha256, length], ...]; payloads follow concatenated in index
 order. Decoding verifies each payload against its content address, so a
 bundle is self-checking — the receiving side never has to trust lengths or
@@ -57,6 +59,15 @@ class DeltaBundle:
     # verification for these — content identical, only the chain moved.
     rekey: Dict[str, str] = field(default_factory=dict)
     blobs: Dict[str, bytes] = field(default_factory=dict)
+    # Cross-image base hints: sibling image names the delta was ALSO
+    # computed against (registry.export_delta's ``base_images``). Layers
+    # and chunks reachable from those images' committed tags are omitted
+    # from the bundle — a fine-tune's bundle carries only adapter deltas
+    # when the receiver holds the base under another name. Purely
+    # advisory provenance for the receiver: its own cross-image holdings
+    # index answers the have-set either way, so an old decoder (or an
+    # empty list) only costs bundle size, never correctness.
+    base_images: List[str] = field(default_factory=list)
 
     @property
     def payload_bytes(self) -> int:
@@ -90,6 +101,7 @@ def encode_delta(bundle: DeltaBundle) -> bytes:
         "name": bundle.name,
         "tag": bundle.tag,
         "base_tag": bundle.base_tag,
+        "base_images": list(bundle.base_images),
         "manifest": bundle.manifest.to_json(),
         "config": bundle.config.to_json(),
         "layers": [layer.to_json() for layer in bundle.layers],
@@ -126,6 +138,7 @@ def decode_delta(data: bytes) -> DeltaBundle:
         name=header["name"],
         tag=header["tag"],
         base_tag=header.get("base_tag", ""),
+        base_images=list(header.get("base_images", [])),
         manifest=manifest,
         config=ImageConfig.from_json(header["config"]),
         layers=[LayerDescriptor.from_json(d) for d in header["layers"]],

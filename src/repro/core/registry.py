@@ -47,6 +47,18 @@ and re-keyed manifest is ACCEPTED):
   re-read or re-hashed per child — and a child only ever commits after
   its relay committed.
 
+The trust boundary is **cross-image** (one content-addressed blob
+universe per store): "held" means reachable from a committed manifest of
+ANY image, so negotiation, the re-key table, blob probes and commit-time
+vouching all answer from the whole namespace — pushing a fine-tune to a
+replica that only holds the base image transfers just the adapter deltas
+(see ``LayerStore.holdings_index``; docs/ARCHITECTURE.md spells out the
+held/committed/vouched model). The mutation gate and orphan
+re-verification keep their exact semantics across images: a committed id
+is immutable no matter which image committed it, and an uncommitted
+on-disk blob/descriptor is never vouched for by a sibling image — only a
+re-hash can adopt it.
+
 ``export_delta``/``import_delta`` are the offline (``docker save``-style)
 form of the same protocol: a self-checking ``DeltaBundle`` byte string
 computed against a base tag instead of a live have-set (``import_delta``
@@ -228,10 +240,11 @@ class DeltaReceiver:
     store's normal crash model.
     """
 
-    # Tags scanned (newest first) when indexing the remote's holdings: the
-    # re-key/family matches worth finding live in the most recent tags;
-    # scanning fewer tags only costs extra deep verification, never
-    # correctness — and keeps negotiate O(window), not O(push history).
+    # Tags scanned (newest first, per image) when indexing the remote's
+    # holdings: the re-key/family matches worth finding live in the most
+    # recent tags; scanning fewer tags only costs extra deep verification,
+    # never correctness — and keeps negotiate O(images x window), not
+    # O(push history).
     TAG_WINDOW = 8
 
     def __init__(self, store: LayerStore):
@@ -265,33 +278,30 @@ class DeltaReceiver:
         self.stats = PushStats()
 
     def _scan_committed(self, name: str) -> Dict[Tuple[str, str], str]:
-        """Index this store's committed holdings for ``name``.
+        """Index this store's committed holdings — across EVERY image, not
+        just ``name`` (the cross-image blob universe): a blob or layer
+        committed under ``base`` vouches for a push of ``tenant3``, which
+        is what makes replicating a fine-tune to a replica that already
+        holds the base image cost O(adapter), not O(image).
 
         ``_committed_layers`` (the held/mutation-gate set) covers EVERY
-        committed tag — an id referenced only by an old tag must still be
-        protected from overwrite. Only the descriptor-reading work — the
-        family index for re-key matching and ``_known_chunks`` — is bounded
-        to the TAG_WINDOW newest tags; missing a match there only costs
-        extra deep verification, never correctness."""
-        by_family: Dict[Tuple[str, str], str] = {}
-        self._committed_layers = set()
-        for i, tag in enumerate(sorted(self.store.list_tags(name),
-                                       reverse=True)):
-            try:
-                m, _ = self.store.read_image(name, tag)
-            except (OSError, ValueError, KeyError):
-                continue
-            self._committed_layers.update(m.layer_ids)
-            if i >= self.TAG_WINDOW:
-                continue
-            for lid in m.layer_ids:
-                if not self.store.has_layer(lid):
-                    continue
-                layer = self.store.read_layer(lid)
-                by_family.setdefault((layer.family, layer.checksum), lid)
-                for rec in layer.records:
-                    self._known_chunks.update(rec.chunks)
-        return by_family
+        committed tag of EVERY image — an id referenced only by an old tag
+        of a sibling image must still be protected from overwrite. Only
+        the descriptor-reading work — the family index for re-key matching
+        and ``_known_chunks`` — is bounded to the TAG_WINDOW newest tags
+        per image; missing a match there only costs extra deep
+        verification, never correctness. The scan itself is served from
+        the store's cached ``holdings_index`` (invalidated at its own
+        commit/removal points), so repeated pushes don't re-walk the
+        namespace. ``name`` is kept for wire-protocol shape (the request
+        names the image being pushed) but no longer narrows the answer."""
+        del name                     # the whole namespace answers now
+        idx = self.store.holdings_index(tag_window=self.TAG_WINDOW)
+        # copies: the index is a shared cache entry; per-push state must
+        # never alias it (receive/commit mutate _known_chunks' siblings)
+        self._committed_layers = set(idx.committed_layers)
+        self._known_chunks.update(idx.known_chunks)
+        return dict(idx.by_family)
 
     # ------------------------------------------------------------ negotiate
     def negotiate(self, name: str,
@@ -303,13 +313,23 @@ class DeltaReceiver:
         layers, checksums of held layers (the in-place-mutation gate runs
         against these), and the re-key table: missing layers whose
         (family, checksum) matches a layer this store already holds under
-        the image's tags — those need no blob probes and no deep
-        verification, because content-checksum equality over the chunk-hash
-        list proves every blob is already present and verified.
+        ANY committed tag of ANY image — a fine-tune's unchanged layers
+        may be vouched for by the base image's holdings, so those need no
+        blob probes and no deep verification: content-checksum equality
+        over the chunk-hash list proves every blob is already present and
+        verified, whatever image name committed it.
 
-        "Held" means reachable from a COMMITTED manifest — a descriptor
-        orphaned by a crashed earlier push is reported missing, so it gets
-        re-received and re-verified rather than trusted.
+        "Held" means reachable from a COMMITTED manifest (of any image) —
+        a descriptor orphaned by a crashed earlier push is reported
+        missing, so it gets re-received and re-verified rather than
+        trusted.
+
+        Crash/retry contract: pure metadata — no store mutation, so a
+        crash during (or after) negotiate leaves nothing to clean up and
+        a retry simply renegotiates. Counters: increments
+        ``negotiations`` (surfaced as ``FanoutStats.negotiation_rounds``,
+        CI-gated to 1 per push) and accounts the request+response size in
+        ``HaveSet.exchange_bytes`` (folded into ``PushStats.bytes_meta``).
         """
         have = HaveSet()
         fault_point("wire.negotiate", self.store.root)
@@ -341,15 +361,26 @@ class DeltaReceiver:
         into one request. Callers only probe chunks of genuinely-new-content
         layers (re-keyed clones were already settled by ``negotiate``), so
         this message is O(changed-layer chunks), not O(image chunks); and
-        chunks already referenced by committed layers are answered from
-        metadata (``_known_chunks``) without touching the filesystem.
+        chunks already referenced by committed layers — of ANY image, the
+        cross-image universe — are answered from metadata
+        (``_known_chunks``) without touching the filesystem.
 
-        A blob that exists on disk but is NOT committed-known is an orphan
-        of a crashed push — possibly torn (batch durability defers fsyncs).
-        It is re-hashed here: intact orphans are adopted as verified; torn
+        A blob that exists on disk but is NOT committed-known under any
+        image is an orphan of a crashed push — possibly torn (batch
+        durability defers fsyncs). It is re-hashed here: intact orphans
+        are adopted as verified (and their deferred fsync re-armed); torn
         ones are deleted (unreferenced, so safe) and reported missing so
-        the pusher resends them. Either way a retry after a crash
-        converges; the cost is O(orphaned chunks), zero on a clean store."""
+        the pusher resends them. Adoption is strictly content-addressed —
+        a sibling image being committed never vouches for an uncommitted
+        blob; only the re-hash does. Either way a retry after a crash
+        converges; the cost is O(orphaned chunks), zero on a clean store.
+
+        Crash/retry contract: the only mutations are deleting torn
+        orphans (unreferenced by construction) and re-arming fsyncs —
+        both idempotent; a crash mid-probe loses nothing a retry can't
+        redo. Counters: adopted orphans increment
+        ``PushStats.blobs_hashed_remote``; probe traffic lands in
+        ``bytes_meta``."""
         fault_point("wire.probe_blobs", self.store.root)
         missing: Set[str] = set()
         for h in chunk_ids:
@@ -374,12 +405,16 @@ class DeltaReceiver:
     # ------------------------------------------------------------- receive
     def receive_layer(self, layer: LayerDescriptor,
                       encoded: Optional[bytes] = None) -> int:
-        """A committed descriptor is IMMUTABLE at this store: receiving the
-        same id with a diverged checksum is the in-place mutation the gate
-        exists for (this is what keeps the offline ``import_delta`` path as
-        safe as the negotiated one); an identical re-send is a no-op.
-        ``encoded`` lets a fan-out source serialize each descriptor once
-        for every replica (must be ``dumps(layer.to_json())``)."""
+        """A committed descriptor is IMMUTABLE at this store — whichever
+        image committed it: receiving the same id with a diverged checksum
+        is the in-place mutation the gate exists for (this is what keeps
+        the offline ``import_delta`` path as safe as the negotiated one,
+        and what stops a tenant push from rewriting a base image's layer
+        in place); an identical re-send is a no-op. ``encoded`` lets a
+        fan-out source serialize each descriptor once for every replica
+        (must be ``dumps(layer.to_json())``). A crash after the write
+        leaves an orphan descriptor the next push re-verifies, never
+        trusts; counters: ``PushStats.layers_sent`` / ``bytes_meta``."""
         fault_point("wire.receive_layer",
                     f"{self.store.root}:{layer.layer_id}")
         if self._committed_layers is not None and \
@@ -402,7 +437,15 @@ class DeltaReceiver:
 
     def receive_blob(self, h: str, data: bytes) -> int:
         """Content-address verification happens HERE, overlapped with the
-        transfer — the only time a pushed byte is ever hashed remotely."""
+        transfer — the only time a pushed byte is ever hashed remotely.
+
+        Crash/retry contract: a mismatching payload raises ``PushRejected``
+        before the blob is linked in; a crash after the write leaves an
+        orphan blob that the next push's ``probe_blobs`` re-hashes (adopt
+        or drop+resend) — received bytes are never durable-trusted until
+        the commit point flushes them. Thread-safe (fan-out receives run
+        on the shared hash pool). Counters: ``PushStats.blobs_sent``,
+        ``blobs_hashed_remote``, ``bytes_payload``."""
         data = fault_point("wire.receive_blob",
                            f"{self.store.root}:{h}", data)
         if sha256_hex(data) != h:
@@ -451,6 +494,21 @@ class DeltaReceiver:
         * all layers: the chain checksums are re-keyed and re-checked
           link by link (metadata-only), so the re-key walk the source did
           is independently recomputed at the remote.
+
+        Pre-existing layers and re-key twins may have been committed under
+        a DIFFERENT image name (the cross-image universe) — the checks are
+        identical either way, because they compare content checksums, not
+        namespaces; a twin is only trusted if ITS id is committed-reachable
+        somewhere, never because its descriptor file merely exists.
+
+        Crash/retry contract: every verification failure raises
+        ``PushRejected`` BEFORE ``write_image`` — the store's previous
+        tags stay authoritative, and a retry re-pushes through the normal
+        orphan-recovery path. The manifest rename inside ``write_image``
+        is the single commit point (deferred batch fsyncs flush just
+        before it). Counters: ``layers_dedup`` / ``layers_rekey_verified``
+        / ``layers_deep_verified`` split the verification classes —
+        CI gates that only genuinely-new-content layers are deep-verified.
         """
         stats = self.stats
         fault_point("wire.commit", self.store.root)
@@ -646,8 +704,9 @@ class RelayNode(DeltaReceiver):
 
     **Retention leases** close the ROADMAP prune-vs-lagging-child race: at
     ``negotiate`` the relay takes a ref-count lease (per child, TTL
-    ``lease_ttl_s``) on every tag its store currently holds for the image
-    — the base revisions a lagging child's delta resumes from. Retention
+    ``lease_ttl_s``) on every tag its store currently holds — across
+    EVERY image, since cross-image holdings can vouch for the pull — the
+    base revisions a lagging child's delta resumes from. Retention
     (``ckpt.prune_steps`` -> ``LayerStore.remove_image``) refuses to
     collect a leased tag. A child's leases are released the moment it
     COMMITS (it no longer needs any base) and simply expire if the child
@@ -659,6 +718,15 @@ class RelayNode(DeltaReceiver):
     committed store with backoff, resuming from whatever bytes already
     landed (orphan adoption); a child that exhausts its attempts is
     quarantined on ``fan.quarantined`` with its ``RetryHealth``.
+
+    Crash/retry contract in one line: nothing downstream of a tier ever
+    commits unless that tier committed first, and every partial state a
+    crash can leave (orphan blobs/descriptors, unexpired leases, unflushed
+    batch fsyncs) is re-verified or expires on the next push — the chaos
+    suite (tests/test_chaos.py) drives every fault point through exactly
+    these counters: ``fan.negotiation_rounds``, ``inflight_blobs``,
+    ``local_blob_reads``, per-child ``ReplicaResult.stats(_partial)`` and
+    ``RetryHealth``.
     """
 
     LEASE_TTL_S = 600.0
@@ -757,12 +825,16 @@ class RelayNode(DeltaReceiver):
         # the relay's current tags are the base revisions a lagging child
         # resumes from: lease them per child BEFORE any plan is made, so a
         # concurrent/interleaved prune can never collect a base a child
-        # still negotiates against. Released at that child's commit;
-        # expires if the child dies mid-pull.
-        held_tags = self.store.list_tags(name)
+        # still negotiates against. Cross-image holdings vouch now, so the
+        # lease set spans EVERY image the relay holds — a child pulling
+        # ``tenant3`` may be negotiating against blobs only ``base``
+        # reaches. Released at that child's commit; expires if the child
+        # dies mid-pull.
+        held_tags = [(img, t) for img in self.store.list_images()
+                     for t in self.store.list_tags(img)]
         for i in range(len(self.children)):
-            for t in held_tags:
-                self.store.acquire_lease(name, t, self._lease_owner(i),
+            for img, t in held_tags:
+                self.store.acquire_lease(img, t, self._lease_owner(i),
                                          self.lease_ttl_s)
         for i, child in enumerate(self.children):
             try:
@@ -909,16 +981,16 @@ class RelayNode(DeltaReceiver):
                 self.fan.replicas[i].stats = st
                 if isinstance(child, RelayNode):
                     self.fan.replicas[i].children = child.fan
-                # committed: this child needs no base revision anymore
-                self.store.release_lease(manifest.name,
-                                         self._lease_owner(i))
+                # committed: this child needs no base revision anymore —
+                # release the whole cross-image lease set it pinned
+                self.store.release_lease(None, self._lease_owner(i))
             except Exception as e:
                 self._fail_child(i, e)
         if self.retry is not None:
             _retry_failed(self.store, self.children, self.fan,
                           manifest.name, manifest.tag, None, self.retry,
                           on_converged=lambda i: self.store.release_lease(
-                              manifest.name, self._lease_owner(i)))
+                              None, self._lease_owner(i)))
         self.fan.negotiation_rounds = max(
             (c.negotiations for c in self.children), default=0)
         self.fan.source_blob_reads = self.local_blob_reads
@@ -1012,6 +1084,23 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
     children while this pull is still in flight; ``source="commit"``
     defers the re-fan until each relay commits; ``None`` keeps each
     relay's own configured mode.
+
+    Replicas already holding a SIBLING image dedup against it: the
+    have-set answers from each replica's whole committed namespace, so
+    fanning a fresh fine-tune to replicas that hold the base image ships
+    only the adapter deltas (bench_multitenant counter-proves zero
+    base-blob transfers).
+
+    Crash/retry contract: the source is read-only throughout; each
+    replica's exposure is the receiver contract above (nothing visible
+    before its own manifest rename, orphans re-verified on retry), so
+    killing this call at ANY point leaves every replica serving its
+    previous tag. With ``retry=``, failed replicas are re-pushed in-run
+    with backoff, resuming from their actual partial progress; exhausted
+    ones are quarantined on ``FanoutStats.quarantined``. Counters:
+    ``negotiation_rounds`` (must be 1), ``source_blob_reads`` ==
+    ``blobs_broadcast`` (each changed blob read exactly once),
+    ``retries_spent``, and per-replica ``ReplicaResult`` books.
     """
     if source not in (None, "inflight", "commit"):
         raise ValueError(f"source must be 'inflight' or 'commit', "
@@ -1224,10 +1313,21 @@ def pull_delta(src: LayerStore, dst: LayerStore, name: str, tag: str,
 
 # --------------------------------------------------------------- offline
 def export_delta(src: LayerStore, name: str, tag: str,
-                 base_tag: Optional[str] = None) -> bytes:
+                 base_tag: Optional[str] = None,
+                 base_images: Sequence[str] = ()) -> bytes:
     """Self-checking offline bundle of ``name:tag`` relative to
     ``name:base_tag`` (everything, when base_tag is None) — the
-    ``docker save`` analogue of ``push_delta`` for air-gapped moves."""
+    ``docker save`` analogue of ``push_delta`` for air-gapped moves.
+
+    ``base_images`` adds cross-image bases: layers and chunks reachable
+    from those sibling images' newest committed tags (the receiver's
+    TAG_WINDOW, per image) are treated as already-held and left out of
+    the bundle, so a fine-tune exported against its base image carries
+    only the adapter delta. The hints ride the header
+    (``DeltaBundle.base_images``); a receiver that doesn't hold those
+    images re-receives whatever its own cross-image holdings can't
+    vouch for — a wrong hint costs a rejected import, never a silently
+    wrong image (every blob is content-address-verified on receipt)."""
     manifest, config = src.read_image(name, tag)
     new_layers = [src.read_layer(lid) for lid in manifest.layer_ids]
     base_layers: List[LayerDescriptor] = []
@@ -1235,11 +1335,22 @@ def export_delta(src: LayerStore, name: str, tag: str,
         base_manifest, _ = src.read_image(name, base_tag)
         base_layers = [src.read_layer(lid)
                        for lid in base_manifest.layer_ids]
+    for img in base_images:
+        for i, t in enumerate(sorted(src.list_tags(img), reverse=True)):
+            if i >= DeltaReceiver.TAG_WINDOW:
+                break
+            try:
+                m, _ = src.read_image(img, t)
+            except (OSError, ValueError, KeyError):
+                continue
+            base_layers.extend(src.read_layer(lid) for lid in m.layer_ids
+                               if src.has_layer(lid))
     missing, rekey, chunks = diff_manifests(base_layers, new_layers)
     return encode_delta(DeltaBundle(
         name=name, tag=tag, base_tag=base_tag or "",
         manifest=manifest, config=config, layers=missing, rekey=rekey,
-        blobs={h: src.read_blob(h) for h in sorted(chunks)}))
+        blobs={h: src.read_blob(h) for h in sorted(chunks)},
+        base_images=list(base_images)))
 
 
 def import_delta(dst, data: bytes) -> PushStats:

@@ -95,6 +95,33 @@ def _fsync_path(path: str) -> None:
 
 
 @dataclass
+class HoldingsIndex:
+    """The store's committed holdings across EVERY image — the cross-image
+    blob universe the delta registry negotiates against (built by
+    ``LayerStore.holdings_index``).
+
+    * ``committed_layers`` — every layer id reachable from ANY committed
+      tag of ANY image. This is the trust boundary: "held" at this store
+      means a member of this set; a descriptor file outside it is an
+      orphan of a crashed push and must never vouch for anything.
+    * ``by_family`` — ``(family, content_checksum) -> layer_id`` over the
+      per-image tag window: the re-key table's lookup side. The twin may
+      live under a DIFFERENT image name than the one being pushed —
+      content-checksum equality over the chunk-hash list is what proves
+      the blobs present, not the image namespace.
+    * ``known_chunks`` — chunk ids referenced by the window-scanned
+      committed layers: membership means present AND verified by the push
+      that committed them, whatever image that was.
+    * ``images`` — the image names scanned (diagnostics / accounting).
+    """
+
+    committed_layers: set = field(default_factory=set)
+    by_family: Dict[Tuple[str, str], str] = field(default_factory=dict)
+    known_chunks: set = field(default_factory=set)
+    images: List[str] = field(default_factory=list)
+
+
+@dataclass
 class BuildReport:
     """What a build actually did — benchmarks read these counters."""
 
@@ -187,6 +214,12 @@ class LayerStore:
         # change at a manifest commit / image removal — cache per image
         # name, invalidated at exactly those two points.
         self._tags_cache: Dict[str, List[str]] = {}
+        # Cross-image holdings index (see holdings_index): rebuilt lazily,
+        # invalidated at exactly the two points that change committed
+        # reachability — write_image and remove_image. Keyed by the tag
+        # window so receivers with different windows never share an entry.
+        self._holdings_cache: Dict[int, "HoldingsIndex"] = {}
+        self._holdings_lock = threading.Lock()
         # Retention leases: (name, tag) -> {owner: expiry (monotonic)}.
         # A relay fanning a delta to lagging children takes a lease on the
         # tags whose blobs those children may still need; retention
@@ -243,15 +276,18 @@ class LayerStore:
             self._leases.setdefault((name, tag), {})[owner] = \
                 time.monotonic() + ttl_s
 
-    def release_lease(self, name: str, owner: str,
+    def release_lease(self, name: Optional[str], owner: str,
                       tag: Optional[str] = None) -> int:
         """Release ``owner``'s lease on ``tag`` (or on every tag of
-        ``name`` when tag is None — the child-committed case). Returns the
-        number of leases released."""
+        ``name`` when tag is None — the child-committed case; or on every
+        tag of EVERY image when name is None too — a relay whose child
+        committed releases the whole cross-image base set it pinned at
+        negotiate). Returns the number of leases released."""
         n = 0
         with self._lease_lock:
             for (nm, tg), owners in list(self._leases.items()):
-                if nm != name or (tag is not None and tg != tag):
+                if (name is not None and nm != name) or \
+                        (tag is not None and tg != tag):
                     continue
                 if owners.pop(owner, None) is not None:
                     n += 1
@@ -397,6 +433,8 @@ class LayerStore:
         self.fsyncs += 2
         self.commits += 1
         self._tags_cache.pop(manifest.name, None)
+        with self._holdings_lock:
+            self._holdings_cache.clear()
 
     def read_image(self, name: str, tag: str) -> Tuple[Manifest, ImageConfig]:
         d = self._image_dir(name)
@@ -428,6 +466,59 @@ class LayerStore:
         self._tags_cache[name] = tags
         return list(tags)
 
+    def list_images(self) -> List[str]:
+        """Every image name with a directory under ``images/`` — the
+        namespace the cross-image holdings index and ``gc()`` walk."""
+        d = os.path.join(self.root, "images")
+        return sorted(n for n in os.listdir(d)
+                      if os.path.isdir(os.path.join(d, n)))
+
+    def holdings_index(self, tag_window: int = 8,
+                       fresh: bool = False) -> HoldingsIndex:
+        """Index this store's committed holdings across EVERY image (see
+        ``HoldingsIndex``) — what ``DeltaReceiver.negotiate``/``commit``
+        vouch from, so a blob committed under ``base`` answers the probe
+        for a push of ``tenant3``.
+
+        ``committed_layers`` covers every tag of every image — an id
+        referenced only by an old tag of a sibling image must still be
+        protected from in-place overwrite. Only the descriptor-READING
+        work (the family/re-key index and ``known_chunks``) is bounded to
+        the ``tag_window`` newest tags *per image*: missing a match there
+        only costs extra deep verification or a resent blob, never
+        correctness. Cached per window; invalidated by this instance's own
+        ``write_image``/``remove_image`` (``fresh=True`` bypasses — needed
+        only when ANOTHER process commits into the same root)."""
+        if not fresh:
+            with self._holdings_lock:
+                cached = self._holdings_cache.get(tag_window)
+            if cached is not None:
+                return cached
+        idx = HoldingsIndex()
+        for name in self.list_images():
+            tags = self.list_tags(name)
+            if tags:        # a fully-untagged image holds nothing
+                idx.images.append(name)
+            for i, tag in enumerate(sorted(tags, reverse=True)):
+                try:
+                    m, _ = self.read_image(name, tag)
+                except (OSError, ValueError, KeyError):
+                    continue
+                idx.committed_layers.update(m.layer_ids)
+                if i >= tag_window:
+                    continue
+                for lid in m.layer_ids:
+                    if not self.has_layer(lid):
+                        continue
+                    layer = self.read_layer(lid)
+                    idx.by_family.setdefault((layer.family, layer.checksum),
+                                             lid)
+                    for rec in layer.records:
+                        idx.known_chunks.update(rec.chunks)
+        with self._holdings_lock:
+            self._holdings_cache[tag_window] = idx
+        return idx
+
     def remove_image(self, name: str, tag: str, force: bool = False) -> bool:
         """Unlink a tag's manifest (layers/blobs become GC fodder; run
         ``gc()`` to reclaim them). Returns False if the tag didn't exist —
@@ -441,6 +532,8 @@ class LayerStore:
         except OSError:
             return False
         self._tags_cache.pop(name, None)
+        with self._holdings_lock:
+            self._holdings_cache.clear()
         return True
 
     # ------------------------------------------------------------ build API
@@ -700,23 +793,27 @@ class LayerStore:
     # ------------------------------------------------------------------- GC
     def gc(self) -> Dict[str, int]:
         """Mark-and-sweep of unreferenced blobs, layer descriptors and
-        config blobs. Mark = everything reachable from a tagged manifest;
-        sweep = the rest, EXCEPT paths belonging to an open
-        batch-durability transaction (written but not yet flushed at a
-        commit) — an un-fsynced blob of an in-flight save must never be
-        deleted out from under its forthcoming manifest. Safe to run at any
-        point between batch-mode transactions (CheckpointManager runs it
-        after each commit); must not run concurrently with a
-        ``durability="full"`` writer, whose pre-commit blobs are not
-        tracked as dirty.
+        config blobs, across the WHOLE image namespace: the roots are
+        every committed tag of every image (``list_images``), so a base
+        blob shared by N tenant images survives ``remove_image`` of N-1 of
+        them — only blobs no surviving manifest reaches are swept. Sweep
+        spares paths belonging to an open batch-durability transaction
+        (written but not yet flushed at a commit) — an un-fsynced blob of
+        an in-flight save must never be deleted out from under its
+        forthcoming manifest. Retention leases pin transitively: a leased
+        tag's manifest cannot be removed (``remove_image`` refuses), its
+        manifest stays a root, so everything it reaches — including blobs
+        also reachable from OTHER images' removed tags — stays marked.
+        Safe to run at any point between batch-mode transactions
+        (CheckpointManager runs it after each commit); must not run
+        concurrently with a ``durability="full"`` writer, whose pre-commit
+        blobs are not tracked as dirty.
         """
         marked_blobs: set = set()
         marked_layers: set = set()
         marked_configs: set = set()
         images_dir = os.path.join(self.root, "images")
-        for name in os.listdir(images_dir):
-            if not os.path.isdir(os.path.join(images_dir, name)):
-                continue
+        for name in self.list_images():
             for tag in self.list_tags(name):
                 try:
                     manifest, config = self.read_image(name, tag)

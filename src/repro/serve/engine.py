@@ -272,6 +272,15 @@ class CheckpointFollower:
     disk stays bounded (mirrors CheckpointManager._gc on the training
     side).
 
+    ``image=`` names the followed image, and the local store may be
+    SHARED by several followers (one per tenant) and by a pre-seeded base
+    image: the pull negotiates against the local store's whole committed
+    namespace (cross-image holdings), so the first poll of a fresh
+    fine-tune over a base-holding store transfers only the adapter delta,
+    and retention is cross-image safe — ``prune_steps`` removes only THIS
+    image's stale step tags, and the store-wide ``gc()`` it triggers
+    never sweeps a blob any sibling image (or lease) still reaches.
+
     ``children`` turns this follower into a RELAY: each poll pulls the
     delta once from the trainer and re-fans it to the downstream stores
     (edge tier) through the same negotiated plan — streaming from the

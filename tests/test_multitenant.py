@@ -1,0 +1,491 @@
+"""Cross-image blob universe (PR 7 tentpole): the receiver's have-set
+answers from EVERY committed tag of EVERY image, re-keying may point at a
+sibling image's content-identical layer, ``gc()`` mark-and-sweeps across
+the whole namespace, leases pin shared blobs through any reachable
+manifest — and none of it weakens the trust boundary: orphans are never
+vouched for by sibling commits, and the in-place-mutation gate fires even
+when the diverged id was committed under a different image name."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BuildReport, DeltaReceiver, ImageConfig, Instruction,
+                        LayerStore, Manifest, PushRejected, RelayNode,
+                        apply_edits, chain_checksum, diff_layer_host,
+                        new_uuid, push_delta, replicate_fanout)
+from repro.core.registry import export_delta, import_delta
+
+
+def mk(tmp_path, name="store"):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+# A fine-tune-shaped image: a big shared backbone, a small per-tenant
+# adapter, config layers on both ends.
+TENANT_INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "backbone", "content"),
+    Instruction("COPY", "adapter", "content"),
+    Instruction("CMD", "serve", "config"),
+]
+
+
+def backbone_payload(rng):
+    return {"w": rng.standard_normal(16384).astype(np.float32)}
+
+
+def adapter_payload(rng, scale=1.0):
+    return {"lora": (rng.standard_normal(256).astype(np.float32) * scale)}
+
+
+def build_base(store, rng):
+    bb, ad = backbone_payload(rng), adapter_payload(rng)
+    prov = {"backbone": lambda: bb, "adapter": lambda: ad}
+    store.build_image("base", "v1", TENANT_INS, prov)
+    return bb, ad
+
+
+def build_tenant(store, name, bb, adapter, parent=("base", "v1")):
+    """Fork a tenant from the base: identical backbone (DLC cache hit ->
+    SAME layer id as the base image), fresh adapter."""
+    prov = {"backbone": lambda: bb, "adapter": lambda: adapter}
+    return store.build_image(name, "v1", TENANT_INS, prov, parent=parent)
+
+
+def image_chunks(store, name, tag="v1"):
+    m, _ = store.read_image(name, tag)
+    out = set()
+    for lid in m.layer_ids:
+        for rec in store.read_layer(lid).records:
+            out.update(rec.chunks)
+    return out
+
+
+def image_meta(store, name, tag="v1"):
+    m, _ = store.read_image(name, tag)
+    return m, {lid: (store.read_layer(lid).family,
+                     store.read_layer(lid).checksum)
+               for lid in m.layer_ids}
+
+
+def instrument_reads(store):
+    """Shadow read_blob with a counting wrapper; returns the log list."""
+    reads, orig = [], store.read_blob
+    store.read_blob = lambda h: (reads.append(h), orig(h))[1]
+    return reads
+
+
+# ------------------------------------------------------- sibling vouching
+def test_sibling_image_vouches_base_blobs(tmp_path, rng):
+    """Pushing a fresh fine-tune to a remote that holds only the BASE
+    image must ship only the adapter delta: the backbone layer id is held
+    via the sibling image's committed manifest, and zero backbone blobs
+    are even read at the source (counter-proof)."""
+    src = mk(tmp_path)
+    bb, _ = build_base(src, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+
+    _, _, rep = build_tenant(src, "tenant", bb, adapter_payload(rng, 3.0))
+    assert rep.layers_cached >= 2          # FROM + backbone share base ids
+
+    adapter_only = image_chunks(src, "tenant") - image_chunks(src, "base")
+    assert adapter_only                    # the fork did change something
+    reads = instrument_reads(src)
+    stats = push_delta(src, remote, "tenant", "v1")
+
+    assert set(reads) <= adapter_only      # zero base-blob reads
+    assert stats.blobs_sent == len(adapter_only)
+    assert stats.layers_dedup >= 2         # vouched by the sibling image
+    assert remote.verify_image("tenant", "v1", deep=True) == []
+    assert remote.verify_image("base", "v1", deep=True) == []
+
+
+def test_rekey_twin_across_images_zero_blob_push(tmp_path, rng):
+    """A tenant whose adapter CONTENT equals the base's but was rebuilt
+    under a new layer id (instruction text changed -> DLC rule 2 rebuild)
+    re-keys against the sibling image's layer: verified by checksum only,
+    no blobs cross the wire."""
+    src = mk(tmp_path)
+    bb, ad = build_base(src, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+
+    ins = list(TENANT_INS)
+    ins[2] = Instruction("COPY", "adapter-lora", "content")
+    prov = {"backbone": lambda: bb, "adapter-lora": lambda: ad}
+    src.build_image("twin", "v1", ins, prov, parent=("base", "v1"))
+
+    stats = push_delta(src, remote, "twin", "v1")
+    assert stats.blobs_sent == 0           # content all held via base
+    assert stats.layers_rekey_verified >= 1
+    assert stats.layers_deep_verified == 0
+    assert remote.verify_image("twin", "v1", deep=True) == []
+
+
+def test_negotiate_rekeys_against_sibling_image(tmp_path, rng):
+    """The HaveSet itself names the cross-image twin: a missing layer
+    whose (family, checksum) matches a layer committed under ANOTHER
+    image is re-keyed, not re-requested."""
+    src = mk(tmp_path)
+    bb, ad = build_base(src, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+
+    ins = list(TENANT_INS)
+    ins[2] = Instruction("COPY", "adapter-lora", "content")
+    prov = {"backbone": lambda: bb, "adapter-lora": lambda: ad}
+    src.build_image("twin", "v1", ins, prov, parent=("base", "v1"))
+
+    m, meta = image_meta(src, "twin")
+    have = DeltaReceiver(remote).negotiate("twin", meta)
+    base_m, _ = remote.read_image("base", "v1")
+    assert set(have.rekey.values()) <= set(base_m.layer_ids)
+    assert have.rekey                      # at least the adapter twin
+
+
+# ----------------------------------------------------------- trust model
+def _rekey_consistent(store, name, tag, edit_leaf):
+    """In-place mutation under the SAME layer ids, self-consistently
+    re-chained — the strongest malicious-pusher forgery."""
+    m, cfg = store.read_image(name, tag)
+    layers = [store.read_layer(lid, use_cache=False) for lid in m.layer_ids]
+    target = next(l for l in layers if not l.empty)
+    payload = store.load_layer_payload(target)
+    payload[edit_leaf] = payload[edit_leaf].copy()
+    payload[edit_leaf][0] = -123.0
+    apply_edits(store, target, diff_layer_host(target, payload),
+                BuildReport())
+    parent, checksums, chains = None, {}, {}
+    for layer in layers:
+        layer.chain = chain_checksum(parent, layer.checksum,
+                                     layer.instruction.text)
+        store.write_layer(layer)
+        checksums[layer.layer_id] = layer.checksum
+        chains[layer.layer_id] = layer.chain
+        parent = layer.chain
+    new_cfg = ImageConfig(config_id=new_uuid(), arch=cfg.arch,
+                          version=cfg.version + 1,
+                          layer_checksums=checksums, layer_chains=chains,
+                          history=cfg.history)
+    return m, new_cfg
+
+
+def test_mutation_gate_fires_across_image_names(tmp_path, rng):
+    """A push of image "tenant" reusing a layer id the remote committed
+    under image "base" — with DIVERGED content — is rejected before any
+    byte moves. The gate spans the whole namespace, not just the pushed
+    image's own tags."""
+    src = mk(tmp_path)
+    build_base(src, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+
+    m, new_cfg = _rekey_consistent(src, "base", "v1", "w")
+    forged = Manifest(name="tenant", tag="v1", layer_ids=list(m.layer_ids),
+                      config_id=new_cfg.config_id)
+    src.write_image(forged, new_cfg)
+    with pytest.raises(PushRejected):
+        push_delta(src, remote, "tenant", "v1")
+    assert remote.verify_image("base", "v1", deep=True) == []
+
+
+def test_orphan_descriptor_not_vouched_by_sibling_commit(tmp_path, rng):
+    """A descriptor left behind by a crashed push is NOT "held" just
+    because a sibling image is committed: negotiate reports it missing and
+    the retry re-receives + re-verifies it."""
+    src = mk(tmp_path)
+    bb, _ = build_base(src, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+
+    build_tenant(src, "tenant", bb, adapter_payload(rng, 3.0))
+    m, meta = image_meta(src, "tenant")
+    adapter_lid = next(lid for lid in m.layer_ids
+                       if src.read_layer(lid).instruction.arg == "adapter")
+    # simulate the crashed earlier push: descriptor lands, no manifest
+    remote.write_layer(src.read_layer(adapter_lid))
+
+    have = DeltaReceiver(remote).negotiate("tenant", meta)
+    assert adapter_lid in have.missing_layers
+    assert adapter_lid not in have.held_checksums
+    stats = push_delta(src, remote, "tenant", "v1")
+    assert stats.layers_deep_verified >= 1       # re-verified, not trusted
+    assert remote.verify_image("tenant", "v1", deep=True) == []
+
+
+def test_torn_orphan_blob_dropped_and_resent(tmp_path, rng):
+    """An uncommitted blob whose bytes don't match its address (torn
+    write from a crash) is re-hashed on probe, dropped and re-sent — a
+    sibling image's commit never vouches for bytes it doesn't reach."""
+    src = mk(tmp_path)
+    bb, _ = build_base(src, rng)
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+
+    build_tenant(src, "tenant", bb, adapter_payload(rng, 3.0))
+    adapter_only = sorted(image_chunks(src, "tenant") -
+                          image_chunks(src, "base"))
+    torn = adapter_only[0]
+    path = remote._blob_path(torn)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(b"torn garbage from a crashed push")
+
+    stats = push_delta(src, remote, "tenant", "v1")
+    assert stats.blobs_hashed_remote >= 1
+    assert remote.read_blob(torn) == src.read_blob(torn)
+    assert remote.verify_image("tenant", "v1", deep=True) == []
+
+
+# -------------------------------------------------------------------- gc
+def test_gc_shared_base_blob_survives_tenant_removal(tmp_path, rng):
+    """Mark-and-sweep roots span the whole namespace: removing one tenant
+    sweeps exactly its exclusive blobs; the backbone survives because the
+    base image (and the other tenant) still reach it."""
+    store = mk(tmp_path)
+    bb, _ = build_base(store, rng)
+    build_tenant(store, "tenant1", bb, adapter_payload(rng, 2.0))
+    build_tenant(store, "tenant2", bb, adapter_payload(rng, 3.0))
+
+    chunks = {n: image_chunks(store, n)
+              for n in ("base", "tenant1", "tenant2")}
+    exclusive1 = chunks["tenant1"] - chunks["base"] - chunks["tenant2"]
+    assert exclusive1
+
+    assert store.remove_image("tenant1", "v1")
+    stats = store.gc()
+    assert stats["blobs_swept"] == len(exclusive1)   # exactly, no more
+    for h in chunks["base"] | chunks["tenant2"]:
+        assert store.has_blob(h)
+    assert store.verify_image("base", "v1", deep=True) == []
+    assert store.verify_image("tenant2", "v1", deep=True) == []
+
+    # removing the LAST holders sweeps everything
+    assert store.remove_image("tenant2", "v1")
+    assert store.remove_image("base", "v1")
+    store.gc()
+    for h in chunks["base"] | chunks["tenant2"]:
+        assert not store.has_blob(h)
+
+
+def test_lease_on_one_image_pins_blobs_shared_with_another(tmp_path, rng):
+    """A retention lease on image A's tag keeps its manifest a GC root,
+    transitively pinning blobs that image B also reached — even after B
+    is removed and collected."""
+    store = mk(tmp_path)
+    bb, _ = build_base(store, rng)
+    build_tenant(store, "tenant", bb, adapter_payload(rng, 2.0))
+    shared = image_chunks(store, "base") & image_chunks(store, "tenant")
+    assert shared
+
+    store.acquire_lease("base", "v1", owner="edge-0", ttl_s=300.0)
+    assert store.remove_image("tenant", "v1")        # tenant not leased
+    store.gc()
+    for h in shared:
+        assert store.has_blob(h)                     # pinned via base
+
+    assert store.remove_image("base", "v1") is False  # lease refuses
+    store.release_lease("base", "edge-0")
+    assert store.remove_image("base", "v1")
+    store.gc()
+    assert not any(store.has_blob(h) for h in shared)
+
+
+def test_release_lease_owner_wide_spans_images(tmp_path, rng):
+    """release_lease(None, owner) drops ONE owner's leases across every
+    image — the relay's converged-child cleanup — without touching other
+    owners' pins."""
+    store = mk(tmp_path)
+    bb, _ = build_base(store, rng)
+    build_tenant(store, "tenant", bb, adapter_payload(rng, 2.0))
+    store.acquire_lease("base", "v1", owner="relay/child-0", ttl_s=300.0)
+    store.acquire_lease("tenant", "v1", owner="relay/child-0", ttl_s=300.0)
+    store.acquire_lease("base", "v1", owner="operator", ttl_s=300.0)
+
+    store.release_lease(None, "relay/child-0")
+    assert not store.leased("tenant", "v1")
+    assert store.leased("base", "v1")                # operator still pins
+
+
+def test_relay_leases_pin_every_image_during_fan(tmp_path, rng):
+    """While a relay fans a tenant image downstream, EVERY image at the
+    relay store is leased — cross-image-vouched blobs can't be pruned out
+    from under a lagging child — and the leases are released once the
+    children converge."""
+    src = mk(tmp_path)
+    bb, _ = build_base(src, rng)
+    build_tenant(src, "tenant", bb, adapter_payload(rng, 3.0))
+    relay_store = mk(tmp_path, "relay")
+    push_delta(src, relay_store, "base", "v1")
+
+    rn = RelayNode(relay_store, children=[str(tmp_path / "child")],
+                   lease_ttl_s=120.0)
+    _, meta = image_meta(src, "tenant")
+    rn.begin_push()
+    rn.negotiate("tenant", meta)
+    # the SIBLING image is pinned for the fan's duration
+    assert relay_store.leased("base", "v1")
+    assert relay_store.remove_image("base", "v1") is False
+
+    fan = replicate_fanout(src, [rn], "tenant", "v1")
+    assert fan.deep_ok
+    assert not relay_store.leased("base", "v1")      # released on converge
+    child = LayerStore(str(tmp_path / "child"))
+    assert child.verify_image("tenant", "v1", deep=True) == []
+
+
+# ------------------------------------------------------------ fleet paths
+def test_fanout_tenant_to_base_holding_replicas(tmp_path, rng):
+    """replicate_fanout of a fresh fine-tune to replicas already holding
+    the base: one negotiation round, per-replica wire = adapter delta
+    only, zero base-blob reads at the source."""
+    src = mk(tmp_path)
+    bb, _ = build_base(src, rng)
+    replicas = [mk(tmp_path, f"r{i}") for i in range(2)]
+    for r in replicas:
+        push_delta(src, r, "base", "v1")
+
+    build_tenant(src, "tenant", bb, adapter_payload(rng, 3.0))
+    adapter_only = image_chunks(src, "tenant") - image_chunks(src, "base")
+    reads = instrument_reads(src)
+    fan = replicate_fanout(src, replicas, "tenant", "v1")
+
+    assert fan.ok and fan.negotiation_rounds == 1
+    assert set(reads) <= adapter_only
+    assert fan.source_blob_reads == fan.blobs_broadcast == len(adapter_only)
+    for r, res in zip(replicas, fan.replicas):
+        assert res.stats.blobs_sent == len(adapter_only)
+        assert r.verify_image("tenant", "v1", deep=True) == []
+
+
+def test_export_delta_base_images_hint_shrinks_bundle(tmp_path, rng):
+    """Offline bundles: export_delta(..., base_images=["base"]) diffs the
+    tenant against the sibling image too, carrying only adapter layers and
+    blobs — and a base-holding receiver imports it cleanly."""
+    src = mk(tmp_path)
+    bb, _ = build_base(src, rng)
+    build_tenant(src, "tenant", bb, adapter_payload(rng, 3.0))
+    adapter_only = image_chunks(src, "tenant") - image_chunks(src, "base")
+
+    full = export_delta(src, "tenant", "v1")
+    slim = export_delta(src, "tenant", "v1", base_images=["base"])
+    assert len(slim) < len(full)
+
+    from repro.core import decode_delta
+    bundle = decode_delta(slim)
+    assert bundle.base_images == ["base"]
+    assert set(bundle.blobs) == adapter_only
+
+    remote = mk(tmp_path, "remote")
+    push_delta(src, remote, "base", "v1")
+    import_delta(remote, slim)
+    assert remote.verify_image("tenant", "v1", deep=True) == []
+
+
+def test_ckpt_manager_fleet_shared_store(tmp_path, rng):
+    """CheckpointManager multi-tenancy end to end: a tenant manager
+    sharing the trainer's store forks its first save from the base image
+    (base_image=), reusing the base's unchanged layer ids, so replicating
+    the tenant to a base-holding replica ships only the adapter delta."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+
+    policy = CheckpointPolicy(async_write=False, incremental=True,
+                              chunk_bytes=512, every_steps=1)
+    base_mgr = CheckpointManager(str(tmp_path / "train"), arch="toy",
+                                 policy=policy, image="base-model")
+    params = {"embed": {"w": rng.standard_normal(2048).astype(np.float32)},
+              "blocks": {"b0": rng.standard_normal(2048).astype(np.float32)},
+              "head": {"w": rng.standard_normal(256).astype(np.float32)}}
+    opt = {"m": np.zeros(16, np.float32)}
+    base_mgr.save(0, params, opt)
+    base_tag = base_mgr.tag_of(0)
+
+    tenant_params = {**params,
+                     "head": {"w": params["head"]["w"] * 2.0}}
+    tenant_mgr = CheckpointManager("", arch="toy", policy=policy,
+                                   image="tenant-a",
+                                   base_image=("base-model", base_tag),
+                                   store=base_mgr.store)
+    rep = tenant_mgr.save(0, tenant_params, opt)
+    assert rep.layers_cached >= 3          # FROM + embed + blocks reused
+
+    store = base_mgr.store
+    adapter_only = image_chunks(store, "tenant-a", base_tag) - \
+        image_chunks(store, "base-model", base_tag)
+    replica = mk(tmp_path, "replica")
+    push_delta(store, replica, "base-model", base_tag)
+    reads = instrument_reads(store)
+    stats = push_delta(store, replica, "tenant-a", base_tag)
+    assert set(reads) <= adapter_only
+    assert stats.blobs_sent == len(adapter_only)
+    assert replica.verify_image("tenant-a", base_tag, deep=True) == []
+
+    # restore isolation: each tenant reads back its own head
+    got, _, _ = tenant_mgr.restore(0)
+    np.testing.assert_array_equal(got["head"]["w"], tenant_params["head"]["w"])
+    got, _, _ = base_mgr.restore(0)
+    np.testing.assert_array_equal(got["head"]["w"], params["head"]["w"])
+
+
+def test_follower_pull_dedups_against_preseeded_base(tmp_path, rng):
+    """A serving follower whose local store was pre-seeded with the base
+    image pulls a tenant checkpoint as an adapter-sized delta — the pull
+    negotiates against the local store's whole committed namespace."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve import CheckpointFollower
+
+    policy = CheckpointPolicy(async_write=False, incremental=True,
+                              chunk_bytes=512, every_steps=1)
+    base_mgr = CheckpointManager(str(tmp_path / "train"), arch="toy",
+                                 policy=policy, image="base-model")
+    params = {"embed": {"w": rng.standard_normal(2048).astype(np.float32)},
+              "blocks": {"b0": rng.standard_normal(2048).astype(np.float32)},
+              "head": {"w": rng.standard_normal(256).astype(np.float32)}}
+    opt = {"m": np.zeros(16, np.float32)}
+    base_mgr.save(0, params, opt)
+    base_tag = base_mgr.tag_of(0)
+
+    tenant_mgr = CheckpointManager("", arch="toy", policy=policy,
+                                   image="tenant-a",
+                                   base_image=("base-model", base_tag),
+                                   store=base_mgr.store)
+    tenant_mgr.save(0, {**params, "head": {"w": params["head"]["w"] * 2.0}},
+                    opt)
+
+    local = mk(tmp_path, "serve-local")
+    push_delta(base_mgr.store, local, "base-model", base_tag)
+    base_blobs = image_chunks(local, "base-model", base_tag)
+
+    follower = CheckpointFollower(base_mgr.store, local, image="tenant-a",
+                                  sparse=False)
+    assert follower.poll() is not None
+    assert follower.last_step == 0
+    assert follower.last_pull.blobs_sent < len(base_blobs)
+    adapter_only = image_chunks(base_mgr.store, "tenant-a", base_tag) - \
+        image_chunks(base_mgr.store, "base-model", base_tag)
+    assert follower.last_pull.blobs_sent == len(adapter_only)
+    assert local.verify_image("tenant-a", base_tag, deep=True) == []
+
+
+# ------------------------------------------------------- holdings caching
+def test_holdings_index_invalidation(tmp_path, rng):
+    """The cached holdings index must never serve stale answers across
+    write_image/remove_image — a fresh tenant commit is immediately
+    visible to the next negotiation."""
+    store = mk(tmp_path)
+    bb, _ = build_base(store, rng)
+    idx = store.holdings_index()
+    assert idx.images == ["base"]
+
+    build_tenant(store, "tenant", bb, adapter_payload(rng, 2.0))
+    idx2 = store.holdings_index()
+    assert idx2.images == ["base", "tenant"]
+    m, _ = store.read_image("tenant", "v1")
+    assert set(m.layer_ids) <= idx2.committed_layers
+
+    store.remove_image("tenant", "v1")
+    assert store.holdings_index().images == ["base"]
+    # fresh=True bypasses the cache entirely
+    assert store.holdings_index(fresh=True).images == ["base"]
