@@ -57,6 +57,16 @@ CLAIMS = [
      True, True),
     ("README/ARCHITECTURE: multitenant 'gc sweeps EXACTLY'",
      "BENCH_multitenant.json", "gc.exact", True, True),
+    ("README/ARCHITECTURE: scrub 'detects 100% of injected flips'",
+     "BENCH_scrub_repair.json", "detect.detection_100", True, True),
+    ("README/ARCHITECTURE: repair 'pulls ONLY the damaged bytes'",
+     "BENCH_scrub_repair.json", "repair.reads_only_damaged", True, True),
+    ("README/ARCHITECTURE: repair 'restores bit-identical state'",
+     "BENCH_scrub_repair.json", "repair.bit_identical", True, True),
+    ("README: repair 'wire <= 1.25x damaged bytes'",
+     "BENCH_scrub_repair.json", "repair.within_budget", True, True),
+    ("README: scrub 'sliced pass unions to the full verdict'",
+     "BENCH_scrub_repair.json", "sliced.union_equals_full", True, True),
 ]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -128,6 +128,20 @@ INVARIANTS = [
     ("multitenant.json", "gc.exact", True),
     ("multitenant.json", "gc.base_survives", True),
     ("multitenant.json", "gc.survivors_verify_clean", True),
+    # self-healing loop: a clean store scrubs quiet (no false positives),
+    # scrub finds 100% of injected at-rest flips with exact attribution...
+    ("scrub_repair.json", "scrub.clean_store_zero_findings", True),
+    ("scrub_repair.json", "detect.detection_100", True),
+    # ... anti-entropy repair reads ONLY the damaged blobs at the peer
+    # (counter-proved), stays within the 1.25x wire budget, deep-verifies
+    # on commit and restores bit-identical payload bytes ...
+    ("scrub_repair.json", "repair.reads_only_damaged", True),
+    ("scrub_repair.json", "repair.within_budget", True),
+    ("scrub_repair.json", "repair.deep_verified", True),
+    ("scrub_repair.json", "repair.bit_identical", True),
+    # ... and a sliced, cursor-resumed scrub pass unions to the same
+    # verdict as one full pass
+    ("scrub_repair.json", "sliced.union_equals_full", True),
 ]
 
 

@@ -22,9 +22,10 @@ from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
                        chain_checksum, content_checksum,
                        injection_history_entry, new_uuid)
 from .registry import (DeltaReceiver, FanoutStats, HaveSet, PushRejected,
-                       PushStats, RelayNode, ReplicaResult, export_delta,
+                       PushStats, RelayNode, RepairFailed, RepairReport,
+                       RepairSession, ReplicaResult, export_delta,
                        import_delta, pull, pull_delta, push, push_delta,
-                       replicate_fanout)
+                       repair_image, replicate_fanout)
 from .store import BuildReport, HoldingsIndex, LayerStore
 
 __all__ = [
@@ -43,7 +44,8 @@ __all__ = [
     "Instruction", "LayerDescriptor", "Manifest", "chain_checksum",
     "content_checksum", "injection_history_entry", "new_uuid",
     "DeltaReceiver", "FanoutStats", "HaveSet", "PushRejected", "PushStats",
-    "RelayNode", "ReplicaResult", "export_delta", "import_delta", "pull",
-    "pull_delta", "push", "push_delta", "replicate_fanout",
+    "RelayNode", "RepairFailed", "RepairReport", "RepairSession",
+    "ReplicaResult", "export_delta", "import_delta", "pull",
+    "pull_delta", "push", "push_delta", "repair_image", "replicate_fanout",
     "BuildReport", "HoldingsIndex", "LayerStore",
 ]

@@ -67,6 +67,7 @@ at a ``RelayNode`` re-fans the bundle to an edge tier).
 from __future__ import annotations
 
 import contextlib
+import os
 import threading
 import time
 from concurrent.futures import Future
@@ -79,7 +80,7 @@ from .chunker import hash_pool, sha256_hex
 from .delta import DeltaBundle, decode_delta, encode_delta
 from .diff import diff_manifests
 from .manifest import (ImageConfig, LayerDescriptor, Manifest, chain_checksum,
-                       content_checksum, dumps)
+                       content_checksum, dumps, new_uuid)
 from .store import LayerStore
 
 
@@ -1408,3 +1409,359 @@ def import_delta(dst, data: bytes) -> PushStats:
             receiver.receive_layer(layer)
         stats = receiver.commit(bundle.manifest, bundle.config)
     return stats
+
+
+# ---------------------------------------------------------------- repair
+#: a RepairSession holds its image's tags against retention while it runs
+REPAIR_LEASE_TTL_S = 600.0
+
+
+class RepairFailed(RuntimeError):
+    """Anti-entropy repair could not fully restore the image: at least one
+    damaged blob or layer descriptor had no intact source among the given
+    peers. Everything sourceable WAS repaired and flushed before this was
+    raised; the rest stays quarantined (the image is visibly-incomplete,
+    never silently-corrupt). The partial accounting rides on ``.report``;
+    ``repair_image(..., force=True)`` returns that report instead of
+    raising — the ``remove_image(force=)``-style explicit override for
+    operators who want the partial heal plus the unsourced list."""
+
+    def __init__(self, msg: str, report: "RepairReport"):
+        super().__init__(msg)
+        self.report = report
+
+
+@dataclass
+class RepairReport:
+    """Wire-accounted outcome of one anti-entropy repair.
+
+    ``bytes_pulled`` counts EVERY byte fetched from peers (including
+    copies that failed re-verification and were discarded);
+    ``damaged_bytes`` counts the bytes actually swapped in (good blob
+    payloads + refetched descriptor encodings). Their ratio —
+    ``wire_amplification`` — is the anti-entropy efficiency claim: repair
+    pulls only the damaged bytes, so with healthy peers it sits at 1.0
+    (the CI gate allows <= 1.25x for retried/rotten peer copies).
+    ``quarantined`` lists blobs moved aside (bad bytes preserved for
+    forensics); ``unsourced`` lists what no peer could supply.
+    """
+
+    name: str = ""
+    tag: str = ""
+    planned_blobs: int = 0        # blobs the plan found damaged/missing
+    planned_layers: int = 0       # descriptors the plan found damaged
+    repaired_blobs: int = 0
+    repaired_layers: int = 0
+    bytes_pulled: int = 0         # every peer byte fetched (incl. discards)
+    damaged_bytes: int = 0        # bytes actually swapped in
+    quarantined: List[str] = field(default_factory=list)
+    unsourced: List[str] = field(default_factory=list)
+    peer_used: Dict[str, str] = field(default_factory=dict)
+    verified_clean: bool = False  # final verify_image(deep=True) ran clean
+    wall_s: float = 0.0
+
+    @property
+    def wire_amplification(self) -> float:
+        """bytes_pulled / damaged_bytes (1.0 = perfectly targeted pull)."""
+        return self.bytes_pulled / max(self.damaged_bytes, 1)
+
+
+class _StorePeer:
+    """Repair-source adapter over anything holding a live ``LayerStore``:
+    the store itself, a root path, or a ``DeltaReceiver``/``RelayNode``
+    (anything with a ``.store``). Fetches never raise — a peer whose own
+    copy is missing or unreadable simply returns None and the session
+    tries the next peer."""
+
+    def __init__(self, store: LayerStore, label: str = ""):
+        self.store = store
+        self.label = label or store.root
+
+    def fetch_blob(self, h: str) -> Optional[bytes]:
+        if not self.store.has_blob(h):
+            return None
+        try:
+            return self.store.read_blob(h)
+        except OSError:
+            return None
+
+    def fetch_layer(self, lid: str
+                    ) -> Optional[Tuple[LayerDescriptor, bytes]]:
+        if not self.store.has_layer(lid):
+            return None
+        try:
+            layer = self.store.read_layer(lid, use_cache=False)
+        except (OSError, ValueError, KeyError):
+            return None
+        return layer, dumps(layer.to_json()).encode()
+
+
+class _BundlePeer:
+    """Repair-source adapter over an offline ``DeltaBundle`` (or raw RDB1
+    bytes) — the air-gapped case: a node with no live peer heals from the
+    same bundle artifact that built the image."""
+
+    def __init__(self, bundle: DeltaBundle, label: str = "bundle"):
+        self.bundle = bundle
+        self.label = label
+        self._layers = {ly.layer_id: ly for ly in bundle.layers}
+
+    def fetch_blob(self, h: str) -> Optional[bytes]:
+        return self.bundle.blobs.get(h)
+
+    def fetch_layer(self, lid: str
+                    ) -> Optional[Tuple[LayerDescriptor, bytes]]:
+        layer = self._layers.get(lid)
+        if layer is None:
+            return None
+        return layer, dumps(layer.to_json()).encode()
+
+
+def _as_peer(p):
+    """Normalize any DeltaReceiver-shaped repair source to a peer adapter:
+    LayerStore | root path | DeltaReceiver/RelayNode (``.store``) |
+    DeltaBundle | encoded RDB1 bytes | an adapter passed through."""
+    if isinstance(p, (_StorePeer, _BundlePeer)):
+        return p
+    if isinstance(p, DeltaBundle):
+        return _BundlePeer(p)
+    if isinstance(p, (bytes, bytearray)):
+        return _BundlePeer(decode_delta(bytes(p)))
+    if isinstance(p, LayerStore):
+        return _StorePeer(p)
+    if isinstance(p, str):
+        return _StorePeer(LayerStore(p))
+    store = getattr(p, "store", None)
+    if isinstance(store, LayerStore):
+        return _StorePeer(store, label=getattr(p, "name", "") or store.root)
+    raise TypeError(f"cannot use {type(p).__name__} as a repair peer")
+
+
+class RepairSession:
+    """Anti-entropy repair of one committed image — the healing half of
+    the scrub/repair loop (delta machinery in reverse: instead of pushing
+    the bytes a peer lacks, pull exactly the bytes THIS store lost).
+
+    ``plan()`` walks the image against its own config locks and finds the
+    damaged set: layer descriptors whose content checksum or config lock
+    no longer match, and blobs that are missing or fail re-hash (a
+    ``ScrubReport`` narrows the re-hash to its listed candidates; without
+    one the plan deep-walks the whole image). The plan takes a retention
+    lease on the tag and pins every reachable blob/layer path against
+    ``gc()`` — a half-repaired image must never be swept under the
+    session (a corrupt descriptor under-marks, so without the pin gc
+    would collect the good siblings of the damaged layer).
+
+    ``run()`` then, under one batch-durability scope: (1) refetches
+    damaged descriptors from the peers, accepting only copies that match
+    the local config's checksum/chain locks, and deep-checks their chunk
+    set; (2) quarantines every corrupt on-disk blob up front — from this
+    point the store is visibly-incomplete, never silently-corrupt, which
+    is exactly the SIGKILL invariant (a killed session leaves quarantined
+    blobs plus possibly some already-verified replacements, both states a
+    clean retry converges from); (3) pulls only the damaged blobs,
+    re-verifying each against its content address on receipt (a peer
+    whose copy is ALSO rotten is skipped — any-peer repair); (4) flushes
+    via the scope's ``sync_for_commit`` and deep-verifies the image.
+    Blobs no peer could source are reported ``unsourced`` and the session
+    raises ``RepairFailed`` unless ``force=True``.
+    """
+
+    def __init__(self, store: LayerStore, name: str, tag: str, peers,
+                 scrub_report=None):
+        self.store = store
+        self.name = name
+        self.tag = tag
+        self.peers = [_as_peer(p) for p in peers]
+        self.scrub_report = scrub_report
+        self.owner = f"repair/{new_uuid()}"
+        self.report = RepairReport(name=name, tag=tag)
+        self.manifest: Optional[Manifest] = None
+        self.config: Optional[ImageConfig] = None
+        self.damaged_blobs: List[str] = []
+        self.damaged_layers: List[str] = []
+        self._protected: set = set()
+        self._planned = False
+
+    # ------------------------------------------------------------- planning
+    def _layer_ok(self, lid: str) -> Tuple[bool, Optional[LayerDescriptor]]:
+        st = self.store
+        if not st.has_layer(lid):
+            return False, None
+        try:
+            layer = st.read_layer(lid, use_cache=False)
+        except (OSError, ValueError, KeyError):
+            return False, None
+        ok = (layer.layer_id == lid
+              and content_checksum(layer.records) == layer.checksum
+              and self.config.layer_checksums.get(lid) == layer.checksum
+              and self.config.layer_chains.get(lid) == layer.chain)
+        return ok, layer if ok else None
+
+    def plan(self) -> "RepairSession":
+        """Find the damaged set, lease the tag, pin the image's reach."""
+        st = self.store
+        try:
+            self.manifest, self.config = st.read_image(self.name, self.tag)
+        except (OSError, ValueError, KeyError) as e:
+            raise RepairFailed(
+                f"{self.name}:{self.tag} manifest/config unreadable — "
+                f"nothing to anchor a repair to ({e})", self.report)
+        st.acquire_lease(self.name, self.tag, self.owner,
+                         REPAIR_LEASE_TTL_S)
+        listed = None
+        if self.scrub_report is not None:
+            listed = set(self.scrub_report.corrupt_blob_hashes)
+        damaged_blobs: set = set()
+        damaged_layers: List[str] = []
+        protect: set = set()
+        for lid in self.manifest.layer_ids:
+            protect.add(st._layer_path(lid))
+            ok, layer = self._layer_ok(lid)
+            if not ok:
+                damaged_layers.append(lid)
+                continue
+            for rec in layer.records:
+                for h in rec.chunks:
+                    protect.add(st._blob_path(h))
+                    if not st.has_blob(h):
+                        damaged_blobs.add(h)
+                    elif (listed is None or h in listed) and \
+                            sha256_hex(st.read_blob(h)) != h:
+                        damaged_blobs.add(h)
+        if damaged_layers:
+            # an unreadable descriptor hides its chunk list, so the
+            # damaged layer's reach cannot be enumerated — and gc's mark
+            # phase is blinded the same way. Pin every on-disk blob until
+            # the descriptor is refetched (run() narrows the pin to the
+            # real chunk set as soon as it has one); without this, a
+            # concurrent gc would sweep the damaged layer's GOOD blobs
+            # out from under the session.
+            blob_root = os.path.join(st.root, "blobs", "sha256")
+            if os.path.isdir(blob_root):
+                for sub in sorted(os.listdir(blob_root)):
+                    d = os.path.join(blob_root, sub)
+                    if os.path.isdir(d):
+                        protect.update(os.path.join(d, fn)
+                                       for fn in os.listdir(d))
+        st.protect_paths(protect)
+        self._protected = set(protect)
+        self.damaged_blobs = sorted(damaged_blobs)
+        self.damaged_layers = damaged_layers
+        self.report.planned_blobs = len(self.damaged_blobs)
+        self.report.planned_layers = len(self.damaged_layers)
+        self._planned = True
+        return self
+
+    # ------------------------------------------------------------ execution
+    def _refetch_layers(self, pending: set) -> None:
+        """Refetch damaged descriptors, validated against the LOCAL config
+        locks (the config is the trust anchor — a peer cannot swap in a
+        descriptor our committed config never vouched for), then extend
+        ``pending`` with any of their chunks that are missing or rotten
+        here."""
+        st, rep = self.store, self.report
+        for lid in self.damaged_layers:
+            fetched = False
+            for peer in self.peers:
+                got = peer.fetch_layer(lid)
+                if got is None:
+                    continue
+                layer, enc = got
+                rep.bytes_pulled += len(enc)
+                if (layer.layer_id != lid
+                        or content_checksum(layer.records) != layer.checksum
+                        or self.config.layer_checksums.get(lid)
+                        != layer.checksum
+                        or self.config.layer_chains.get(lid) != layer.chain):
+                    continue        # peer's copy diverges from our locks
+                chunk_paths = {st._blob_path(h)
+                               for r in layer.records for h in r.chunks}
+                st.protect_paths(chunk_paths)
+                self._protected |= chunk_paths
+                st.write_layer(layer, encoded=enc)
+                rep.damaged_bytes += len(enc)
+                rep.repaired_layers += 1
+                rep.peer_used[lid] = peer.label
+                for r in layer.records:
+                    for h in r.chunks:
+                        if not st.has_blob(h):
+                            pending.add(h)
+                        elif sha256_hex(st.read_blob(h)) != h:
+                            pending.add(h)
+                fetched = True
+                break
+            if not fetched:
+                rep.unsourced.append(f"layer:{lid}")
+
+    def run(self, force: bool = False) -> RepairReport:
+        """Execute the repair (planning first if needed). Returns the
+        report; raises ``RepairFailed`` when anything stayed unsourced and
+        ``force`` is False. Lease and gc pins are always released."""
+        t0 = time.perf_counter()
+        st, rep = self.store, self.report
+        try:
+            if not self._planned:
+                self.plan()
+            with _BatchScope(st):
+                pending = set(self.damaged_blobs)
+                self._refetch_layers(pending)
+                # quarantine first: every pending blob still on disk is a
+                # failed re-hash — move the bad bytes out of the namespace
+                # BEFORE pulling (write_blob dedups on existence, and a
+                # SIGKILL here must leave visibly-incomplete, not
+                # silently-corrupt)
+                for h in sorted(pending):
+                    if st.has_blob(h) and st.quarantine_blob(h):
+                        rep.quarantined.append(h)
+                for h in sorted(pending):
+                    data = None
+                    src_label = ""
+                    for peer in self.peers:
+                        raw = peer.fetch_blob(h)
+                        if raw is None:
+                            continue
+                        raw = fault_point("repair.pull",
+                                          f"{st.root}:{h}", raw)
+                        rep.bytes_pulled += len(raw)
+                        if sha256_hex(raw) != h:
+                            continue    # peer's copy is ALSO rotten
+                        data, src_label = raw, peer.label
+                        break
+                    if data is None:
+                        rep.unsourced.append(h)
+                        continue
+                    st.write_blob(h, data)
+                    rep.damaged_bytes += len(data)
+                    rep.repaired_blobs += 1
+                    rep.peer_used[h] = src_label
+                # crash window probe: quarantines + swap-ins happened,
+                # the durability flush has not (SIGKILL tests kill here)
+                fault_point("repair.commit", st.root)
+            if not rep.unsourced:
+                rep.verified_clean = \
+                    st.verify_image(self.name, self.tag, deep=True) == []
+            rep.wall_s = time.perf_counter() - t0
+            if rep.unsourced and not force:
+                raise RepairFailed(
+                    f"{self.name}:{self.tag}: {len(rep.unsourced)} "
+                    f"item(s) unsourceable from {len(self.peers)} peer(s) "
+                    f"(quarantined, image left visibly-incomplete): "
+                    f"{rep.unsourced[:4]}", rep)
+            return rep
+        finally:
+            st.unprotect_paths(self._protected)
+            st.release_lease(self.name, self.owner, self.tag)
+
+
+def repair_image(store: LayerStore, name: str, tag: str, peers,
+                 scrub_report=None, force: bool = False) -> RepairReport:
+    """Heal ``name:tag`` in ``store`` from any peer holding good copies —
+    see ``RepairSession``. ``peers`` accepts any mix of live stores, root
+    paths, ``DeltaReceiver``/``RelayNode`` fronts, ``DeltaBundle``s or
+    encoded bundle bytes; they are tried in order per damaged item.
+    ``scrub_report`` narrows the damage plan to the scrub's findings;
+    ``force=True`` returns a partial report instead of raising when some
+    items have no intact source anywhere."""
+    return RepairSession(store, name, tag, peers,
+                         scrub_report=scrub_report).run(force=force)

@@ -46,6 +46,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..ft.faults import fault_point
+from ..ft.scrub import (ScrubFinding, ScrubReport, clear_cursor,
+                        load_cursor, save_cursor)
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, assemble_tensor,
                       chunk_tensor, sha256_hex)
 from .fingerprint import fingerprint_chunks_ref
@@ -119,6 +121,40 @@ class HoldingsIndex:
     by_family: Dict[Tuple[str, str], str] = field(default_factory=dict)
     known_chunks: set = field(default_factory=set)
     images: List[str] = field(default_factory=list)
+
+
+@dataclass
+class _HoldingsAux:
+    """Refcount bookkeeping that makes a cached ``HoldingsIndex``
+    incrementally maintainable (one aux per cached tag window).
+
+    The index's sets are membership views over these counts: a layer id is
+    committed while ``layer_refs > 0`` (summed over every (image, tag)
+    that references it), a chunk is known while ``chunk_refs > 0`` (summed
+    over the *windowed* layers that reference it), and the re-key table
+    maps a ``(family, checksum)`` key to the lexicographically smallest of
+    its live windowed members — so adds and subtracts commute and a
+    remove+gc can never leave the index vouching for a swept blob.
+    ``win_added`` records, per windowed (image, tag), exactly the layer
+    ids whose chunks were indexed (a missing descriptor is skipped at add
+    time, so subtraction must not guess). Any inconsistency — an
+    unreadable descriptor at subtract time, an underflowing count, a tag
+    overwrite — invalidates the whole cache entry and the next
+    ``holdings_index`` call falls back to the full rebuild (the cold-start
+    / repair path).
+    """
+
+    layer_refs: Dict[str, int] = field(default_factory=dict)
+    win_layer_refs: Dict[str, int] = field(default_factory=dict)
+    chunk_refs: Dict[str, int] = field(default_factory=dict)
+    family_members: Dict[Tuple[str, str], set] = field(default_factory=dict)
+    win_tags: Dict[str, List[str]] = field(default_factory=dict)
+    win_added: Dict[Tuple[str, str], List[str]] = field(default_factory=dict)
+
+
+class _HoldingsStale(Exception):
+    """Internal: the incremental holdings update hit a case it cannot
+    apply soundly — drop the cache entry, rebuild lazily."""
 
 
 @dataclass
@@ -215,11 +251,23 @@ class LayerStore:
         # name, invalidated at exactly those two points.
         self._tags_cache: Dict[str, List[str]] = {}
         # Cross-image holdings index (see holdings_index): rebuilt lazily,
-        # invalidated at exactly the two points that change committed
-        # reachability — write_image and remove_image. Keyed by the tag
+        # then maintained INCREMENTALLY at the two points that change
+        # committed reachability — write_image applies the new manifest's
+        # layer set, remove_image subtracts it (refcounted via
+        # _HoldingsAux; any case the incremental path cannot apply soundly
+        # drops the entry and the next call rebuilds). Keyed by the tag
         # window so receivers with different windows never share an entry.
         self._holdings_cache: Dict[int, "HoldingsIndex"] = {}
+        self._holdings_aux: Dict[int, _HoldingsAux] = {}
         self._holdings_lock = threading.Lock()
+        # Blob/layer paths pinned by an in-progress RepairSession
+        # (core/registry.py): a quarantined-then-refetched layer descriptor
+        # leaves gc()'s mark phase blind to the blobs it references, so the
+        # session registers every path the damaged image reaches here and
+        # gc's sweep spares them — the same exemption the batch-durability
+        # dirty set gets. Guarded by _dirty_lock (gc snapshots both
+        # together).
+        self._protected_paths: set = set()
         # Retention leases: (name, tag) -> {owner: expiry (monotonic)}.
         # A relay fanning a delta to lagging children takes a lease on the
         # tags whose blobs those children may still need; retention
@@ -377,6 +425,64 @@ class LayerStore:
             self._dirty_files.discard(path)
         return True
 
+    # ----------------------------------------------------------- quarantine
+    def _quarantine_path(self, h: str) -> str:
+        return os.path.join(self.root, "quarantine", h)
+
+    def quarantine_blob(self, h: str) -> bool:
+        """Move a corrupt blob out of the content-addressed namespace into
+        ``<root>/quarantine/<h>`` (atomic rename — the bad bytes are
+        preserved for forensics, the address is freed for a verified
+        replacement). Unlike ``drop_blob`` this is safe on a blob that IS
+        still referenced by committed manifests: the image goes from
+        silently-corrupt to visibly-incomplete, which every reader already
+        handles (``missing blob`` from ``verify_image``, ``OSError`` from
+        ``read_blob``) and ``repair_image`` heals. Returns False if the
+        blob didn't exist."""
+        src = self._blob_path(h)
+        dst = self._quarantine_path(h)
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        try:
+            os.replace(src, dst)
+        except OSError:
+            return False
+        self._durable_paths.discard(src)
+        with self._dirty_lock:
+            self._dirty_files.discard(src)
+        return True
+
+    def quarantined_blobs(self) -> List[str]:
+        """Content addresses currently held in quarantine."""
+        d = os.path.join(self.root, "quarantine")
+        if not os.path.isdir(d):
+            return []
+        return sorted(fn for fn in os.listdir(d) if _HEX_ID.fullmatch(fn))
+
+    def purge_quarantine(self, h: Optional[str] = None) -> int:
+        """Discard one quarantined blob (or all of them) for good — the
+        operator's explicit override once the bad bytes are no longer
+        interesting. Returns the number removed."""
+        victims = [h] if h is not None else self.quarantined_blobs()
+        n = 0
+        for v in victims:
+            try:
+                os.remove(self._quarantine_path(v))
+                n += 1
+            except OSError:
+                continue
+        return n
+
+    # ------------------------------------------------------ repair pinning
+    def protect_paths(self, paths) -> None:
+        """Pin absolute paths against the ``gc()`` sweep for the duration
+        of a repair (see ``_protected_paths``). Idempotent."""
+        with self._dirty_lock:
+            self._protected_paths.update(paths)
+
+    def unprotect_paths(self, paths) -> None:
+        with self._dirty_lock:
+            self._protected_paths.difference_update(paths)
+
     # --------------------------------------------------------------- layers
     def _layer_path(self, layer_id: str) -> str:
         return os.path.join(self.root, "layers", f"{layer_id}.json")
@@ -433,8 +539,7 @@ class LayerStore:
         self.fsyncs += 2
         self.commits += 1
         self._tags_cache.pop(manifest.name, None)
-        with self._holdings_lock:
-            self._holdings_cache.clear()
+        self._holdings_apply_commit(manifest)
 
     def read_image(self, name: str, tag: str) -> Tuple[Manifest, ImageConfig]:
         d = self._image_dir(name)
@@ -494,30 +599,167 @@ class LayerStore:
                 cached = self._holdings_cache.get(tag_window)
             if cached is not None:
                 return cached
-        idx = HoldingsIndex()
+        idx, aux = HoldingsIndex(), _HoldingsAux()
         for name in self.list_images():
             tags = self.list_tags(name)
             if tags:        # a fully-untagged image holds nothing
                 idx.images.append(name)
-            for i, tag in enumerate(sorted(tags, reverse=True)):
+            stags = sorted(tags, reverse=True)
+            if stags:
+                aux.win_tags[name] = list(stags)
+            for i, tag in enumerate(stags):
                 try:
                     m, _ = self.read_image(name, tag)
                 except (OSError, ValueError, KeyError):
                     continue
+                for lid in m.layer_ids:
+                    aux.layer_refs[lid] = aux.layer_refs.get(lid, 0) + 1
                 idx.committed_layers.update(m.layer_ids)
                 if i >= tag_window:
                     continue
-                for lid in m.layer_ids:
-                    if not self.has_layer(lid):
-                        continue
-                    layer = self.read_layer(lid)
-                    idx.by_family.setdefault((layer.family, layer.checksum),
-                                             lid)
-                    for rec in layer.records:
-                        idx.known_chunks.update(rec.chunks)
+                self._win_add_manifest(idx, aux, name, tag, m)
         with self._holdings_lock:
             self._holdings_cache[tag_window] = idx
+            self._holdings_aux[tag_window] = aux
         return idx
+
+    # -------------------------------------- incremental holdings maintenance
+    def _win_add_manifest(self, idx: HoldingsIndex, aux: _HoldingsAux,
+                          name: str, tag: str, m: Manifest) -> None:
+        """Index a manifest's layers into the windowed (family / chunk)
+        side of the holdings, recording exactly what was added so a later
+        window eviction can subtract it. Shared by the full rebuild and
+        the incremental write_image path — equivalence by construction."""
+        added: List[str] = []
+        for lid in m.layer_ids:
+            if not self.has_layer(lid):
+                continue
+            layer = self.read_layer(lid)
+            added.append(lid)
+            n = aux.win_layer_refs.get(lid, 0)
+            aux.win_layer_refs[lid] = n + 1
+            if n:
+                continue
+            key = (layer.family, layer.checksum)
+            members = aux.family_members.setdefault(key, set())
+            members.add(lid)
+            idx.by_family[key] = min(members)
+            for rec in layer.records:
+                for h in rec.chunks:
+                    c = aux.chunk_refs.get(h, 0)
+                    aux.chunk_refs[h] = c + 1
+                    if not c:
+                        idx.known_chunks.add(h)
+        aux.win_added[(name, tag)] = added
+
+    def _win_sub_tag(self, idx: HoldingsIndex, aux: _HoldingsAux,
+                     name: str, tag: str) -> None:
+        """Subtract a tag evicted from the window: exactly the layers
+        ``_win_add_manifest`` recorded for it, refcounted down."""
+        for lid in aux.win_added.pop((name, tag), []):
+            n = aux.win_layer_refs.get(lid, 0) - 1
+            if n < 0:
+                raise _HoldingsStale
+            if n:
+                aux.win_layer_refs[lid] = n
+                continue
+            del aux.win_layer_refs[lid]
+            layer = self.read_layer(lid)    # unreadable -> stale -> rebuild
+            key = (layer.family, layer.checksum)
+            members = aux.family_members.get(key, set())
+            members.discard(lid)
+            if members:
+                idx.by_family[key] = min(members)
+            else:
+                aux.family_members.pop(key, None)
+                idx.by_family.pop(key, None)
+            for rec in layer.records:
+                for h in rec.chunks:
+                    c = aux.chunk_refs.get(h, 0) - 1
+                    if c < 0:
+                        raise _HoldingsStale
+                    if c:
+                        aux.chunk_refs[h] = c
+                    else:
+                        del aux.chunk_refs[h]
+                        idx.known_chunks.discard(h)
+
+    def _holdings_apply_commit(self, manifest: Manifest) -> None:
+        """write_image hook: fold the committed manifest into every cached
+        window instead of invalidating wholesale (the ROADMAP incremental-
+        maintenance item). Unsound cases degrade to invalidation."""
+        name, tag = manifest.name, manifest.tag
+        with self._holdings_lock:
+            for window in list(self._holdings_cache):
+                idx = self._holdings_cache[window]
+                aux = self._holdings_aux.get(window)
+                try:
+                    if aux is None:
+                        raise _HoldingsStale
+                    tags = aux.win_tags.setdefault(name, [])
+                    if tag in tags:     # tag overwrite: old layer set gone
+                        raise _HoldingsStale
+                    for lid in manifest.layer_ids:
+                        aux.layer_refs[lid] = \
+                            aux.layer_refs.get(lid, 0) + 1
+                    idx.committed_layers.update(manifest.layer_ids)
+                    if name not in idx.images:
+                        idx.images.append(name)
+                        idx.images.sort()
+                    old_win = tags[:window]
+                    tags.append(tag)
+                    tags.sort(reverse=True)
+                    new_win = tags[:window]
+                    for t in old_win:               # at most one eviction
+                        if t not in new_win:
+                            self._win_sub_tag(idx, aux, name, t)
+                    if tag in new_win:
+                        self._win_add_manifest(idx, aux, name, tag,
+                                               manifest)
+                except (_HoldingsStale, OSError, ValueError, KeyError):
+                    self._holdings_cache.pop(window, None)
+                    self._holdings_aux.pop(window, None)
+
+    def _holdings_apply_remove(self, name: str, tag: str,
+                               manifest: Optional[Manifest]) -> None:
+        """remove_image hook: subtract the removed tag's layer set from
+        every cached window (manifest was read before the unlink; None
+        means it was unreadable — invalidate)."""
+        with self._holdings_lock:
+            for window in list(self._holdings_cache):
+                idx = self._holdings_cache[window]
+                aux = self._holdings_aux.get(window)
+                try:
+                    if aux is None or manifest is None:
+                        raise _HoldingsStale
+                    tags = aux.win_tags.get(name, [])
+                    if tag not in tags:
+                        raise _HoldingsStale
+                    old_win = tags[:window]
+                    tags.remove(tag)
+                    new_win = tags[:window]
+                    for lid in manifest.layer_ids:
+                        n = aux.layer_refs.get(lid, 0) - 1
+                        if n < 0:
+                            raise _HoldingsStale
+                        if n:
+                            aux.layer_refs[lid] = n
+                        else:
+                            aux.layer_refs.pop(lid, None)
+                            idx.committed_layers.discard(lid)
+                    if tag in old_win:
+                        self._win_sub_tag(idx, aux, name, tag)
+                    for t in new_win:               # at most one promotion
+                        if t not in old_win:
+                            m2, _ = self.read_image(name, t)
+                            self._win_add_manifest(idx, aux, name, t, m2)
+                    if not tags:
+                        aux.win_tags.pop(name, None)
+                        if name in idx.images:
+                            idx.images.remove(name)
+                except (_HoldingsStale, OSError, ValueError, KeyError):
+                    self._holdings_cache.pop(window, None)
+                    self._holdings_aux.pop(window, None)
 
     def remove_image(self, name: str, tag: str, force: bool = False) -> bool:
         """Unlink a tag's manifest (layers/blobs become GC fodder; run
@@ -527,13 +769,16 @@ class LayerStore:
         that know the children are gone for good)."""
         if not force and self.leased(name, tag):
             return False
+        try:                # read BEFORE unlink: the incremental holdings
+            manifest, _ = self.read_image(name, tag)   # subtraction needs
+        except (OSError, ValueError, KeyError):        # the layer set
+            manifest = None
         try:
             os.remove(os.path.join(self.root, "images", name, f"{tag}.json"))
         except OSError:
             return False
         self._tags_cache.pop(name, None)
-        with self._holdings_lock:
-            self._holdings_cache.clear()
+        self._holdings_apply_remove(name, tag, manifest)
         return True
 
     # ------------------------------------------------------------ build API
@@ -790,6 +1035,197 @@ class LayerStore:
             parent_chain = layer.chain
         return problems
 
+    # ---------------------------------------------------------------- scrub
+    def scrub(self, max_bytes: Optional[int] = None,
+              max_items: Optional[int] = None,
+              reset: bool = False) -> "ScrubReport":
+        """Integrity walk over the WHOLE store — the detection half of the
+        self-healing loop (``ft/scrub.py`` owns the result model,
+        ``repair_image`` in core/registry.py consumes the findings).
+
+        Two phases per pass:
+
+        1. **metadata** (first slice of a pass only): every committed
+           tag's manifest, config locks, layer content checksums and chain
+           re-key links are re-verified from the bytes on disk (never the
+           cache), and committed chunks are checked for existence —
+           exactly ``verify_image(deep=False)``'s checks plus missing-blob
+           detection, across the full namespace.
+        2. **blobs**: every payload under ``blobs/sha256`` is re-hashed
+           against its content address, shard by shard (256 shards). A
+           mismatch on a committed blob is a ``corrupt_blob`` finding
+           attributed to the first (image, tag, layer) that references
+           it; unreferenced blobs are ``orphan_blob`` debris.
+
+        ``max_bytes``/``max_items`` bound one slice's re-hash work (at
+        shard granularity; at least one shard always makes progress) —
+        when the budget runs out the position persists in
+        ``<root>/scrub.cursor.json`` and the next call resumes there, so a
+        fleet-scale store is scrubbed across many short slices. The
+        attribution map is rebuilt each slice (cheap metadata reads); the
+        byte-heavy re-hashing never repeats a shard within a pass.
+        ``reset=True`` discards the cursor and starts a fresh pass.
+
+        Paths belonging to the open batch transaction or pinned by an
+        in-progress repair are skipped — they are not committed state.
+        Losing the cursor (crash between slices) only costs re-scrubbed
+        shards, never a false verdict.
+        """
+        t0 = time.perf_counter()
+        rep = ScrubReport()
+        if reset:
+            clear_cursor(self.root)
+        cursor = load_cursor(self.root)
+        first_slice = cursor == 0
+        with self._dirty_lock:
+            in_flight = set(self._dirty_files) | set(self._protected_paths)
+
+        # metadata walk: attribution map (every slice) + integrity
+        # findings (first slice of the pass only — they would duplicate)
+        refs: Dict[str, Tuple[str, str, str]] = {}
+        committed_lids: set = set()
+        flagged: set = set()            # (kind, id) dedup across shared refs
+        for name in self.list_images():
+            seen = False
+            for tag in self.list_tags(name, fresh=True):
+                try:
+                    manifest, config = self.read_image(name, tag)
+                except (OSError, ValueError, KeyError) as e:
+                    if first_slice:
+                        rep.findings.append(ScrubFinding(
+                            "manifest_unreadable", detail=str(e),
+                            image=name, tag=tag))
+                    continue
+                seen = True
+                parent_chain: Optional[str] = None
+                chain_broken = False
+                for lid in manifest.layer_ids:
+                    committed_lids.add(lid)
+                    if not self.has_layer(lid):
+                        if first_slice and ("missing_layer", lid) not in flagged:
+                            flagged.add(("missing_layer", lid))
+                            rep.findings.append(ScrubFinding(
+                                "missing_layer", image=name, tag=tag,
+                                layer_id=lid))
+                        chain_broken = True
+                        continue
+                    try:
+                        layer = self.read_layer(lid, use_cache=False)
+                    except (OSError, ValueError, KeyError) as e:
+                        if first_slice and ("layer_unreadable", lid) not in flagged:
+                            flagged.add(("layer_unreadable", lid))
+                            rep.findings.append(ScrubFinding(
+                                "layer_unreadable", detail=str(e),
+                                image=name, tag=tag, layer_id=lid))
+                        chain_broken = True
+                        continue
+                    rep.layers_scanned += 1
+                    if first_slice:
+                        if content_checksum(layer.records) != layer.checksum \
+                                and ("layer_checksum_mismatch", lid) not in flagged:
+                            flagged.add(("layer_checksum_mismatch", lid))
+                            rep.findings.append(ScrubFinding(
+                                "layer_checksum_mismatch", image=name,
+                                tag=tag, layer_id=lid))
+                        if config.layer_checksums.get(lid) != layer.checksum \
+                                and ("config_lock_mismatch", lid) not in flagged:
+                            flagged.add(("config_lock_mismatch", lid))
+                            rep.findings.append(ScrubFinding(
+                                "config_lock_mismatch", image=name,
+                                tag=tag, layer_id=lid))
+                        if not chain_broken:
+                            expected = chain_checksum(
+                                parent_chain, layer.checksum,
+                                layer.instruction.text)
+                            if (expected != layer.chain or
+                                    config.layer_chains.get(lid) != layer.chain) \
+                                    and ("chain_mismatch", lid) not in flagged:
+                                flagged.add(("chain_mismatch", lid))
+                                rep.findings.append(ScrubFinding(
+                                    "chain_mismatch", image=name, tag=tag,
+                                    layer_id=lid))
+                    for rec in layer.records:
+                        for h in rec.chunks:
+                            refs.setdefault(h, (name, tag, lid))
+                            if first_slice and not self.has_blob(h) \
+                                    and ("missing_blob", h) not in flagged:
+                                flagged.add(("missing_blob", h))
+                                rep.findings.append(ScrubFinding(
+                                    "missing_blob", image=name, tag=tag,
+                                    layer_id=lid, blob=h))
+                    parent_chain = layer.chain
+            if seen:
+                rep.images_scanned += 1
+
+        if first_slice:
+            layers_dir = os.path.join(self.root, "layers")
+            for fn in sorted(os.listdir(layers_dir)):
+                lid = fn[:-5]
+                if not fn.endswith(".json") or not _HEX_ID.fullmatch(lid) \
+                        or lid in committed_lids:
+                    continue
+                if os.path.join(layers_dir, fn) in in_flight:
+                    continue
+                rep.findings.append(ScrubFinding(
+                    "orphan_layer", detail="descriptor unreachable from "
+                    "any committed tag", layer_id=lid))
+
+        # blob phase: re-hash shards from the cursor until done or budget
+        from ..ft.scrub import N_SHARDS
+        blob_root = os.path.join(self.root, "blobs", "sha256")
+        shard = cursor
+        budget_hit = False
+        while shard < N_SHARDS:
+            d = os.path.join(blob_root, f"{shard:02x}")
+            if os.path.isdir(d):
+                for fn in sorted(os.listdir(d)):
+                    if len(fn) != 64 or not _HEX_ID.fullmatch(fn):
+                        continue
+                    path = os.path.join(d, fn)
+                    if path in in_flight:
+                        continue
+                    try:
+                        with open(path, "rb") as f:
+                            data = f.read()
+                    except OSError:
+                        continue
+                    rep.blobs_scanned += 1
+                    rep.bytes_scanned += len(data)
+                    if sha256_hex(data) != fn:
+                        where = refs.get(fn)
+                        if where:
+                            rep.findings.append(ScrubFinding(
+                                "corrupt_blob",
+                                detail="content re-hash mismatch",
+                                image=where[0], tag=where[1],
+                                layer_id=where[2], blob=fn))
+                        else:
+                            rep.findings.append(ScrubFinding(
+                                "orphan_blob",
+                                detail="unreferenced, fails re-hash",
+                                blob=fn))
+                    elif fn not in refs:
+                        rep.findings.append(ScrubFinding(
+                            "orphan_blob", detail="unreferenced", blob=fn))
+            rep.shards_scanned += 1
+            shard += 1
+            if shard < N_SHARDS and (
+                    (max_bytes is not None and rep.bytes_scanned >= max_bytes)
+                    or (max_items is not None
+                        and rep.blobs_scanned >= max_items)):
+                budget_hit = True
+                break
+
+        if budget_hit:
+            rep.next_shard = shard
+            save_cursor(self.root, shard)
+        else:
+            rep.complete = True
+            rep.next_shard = 0
+            clear_cursor(self.root)
+        rep.wall_s = time.perf_counter() - t0
+        return rep
+
     # ------------------------------------------------------------------- GC
     def gc(self) -> Dict[str, int]:
         """Mark-and-sweep of unreferenced blobs, layer descriptors and
@@ -824,11 +1260,20 @@ class LayerStore:
                     marked_layers.add(lid)
                     if not self.has_layer(lid):
                         continue
-                    for rec in self.read_layer(lid).records:
+                    try:
+                        layer = self.read_layer(lid)
+                    except (OSError, ValueError, KeyError):
+                        # an unreadable (corrupt/quarantined) descriptor
+                        # can't contribute marks — its blobs survive only
+                        # via other references or the repair-protected set
+                        continue
+                    for rec in layer.records:
                         marked_blobs.update(rec.chunks)
 
         with self._dirty_lock:
-            protected = set(self._dirty_files)
+            # exemptions: the open batch transaction's dirty files AND any
+            # path pinned by an in-progress RepairSession (protect_paths)
+            protected = set(self._dirty_files) | set(self._protected_paths)
         stats = {"layers_swept": 0, "blobs_swept": 0, "bytes_swept": 0,
                  "configs_swept": 0}
 

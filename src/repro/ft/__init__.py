@@ -2,10 +2,12 @@ from .straggler import DeadlineSkipper, StragglerStats
 from .watchdog import Watchdog
 from .elastic import shrink_mesh_shape
 from .faults import (CrashInjected, FaultEvent, FaultInjected, FaultInjector,
-                     FaultSpec, fault_point, inject)
+                     FaultSpec, fault_point, inject, inject_bitrot)
 from .retry import RetryExhausted, RetryHealth, RetryPolicy
+from .scrub import ScrubFinding, ScrubReport
 
 __all__ = ["DeadlineSkipper", "StragglerStats", "Watchdog",
            "shrink_mesh_shape", "CrashInjected", "FaultEvent",
            "FaultInjected", "FaultInjector", "FaultSpec", "fault_point",
-           "inject", "RetryExhausted", "RetryHealth", "RetryPolicy"]
+           "inject", "inject_bitrot", "RetryExhausted", "RetryHealth",
+           "RetryPolicy", "ScrubFinding", "ScrubReport"]

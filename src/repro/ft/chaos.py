@@ -1,12 +1,18 @@
 """Chaos harness: the seeded fault matrix CI soaks nightly.
 
-Every cell of ``(drop | corrupt | delay | crash) x (push | fanout | relay |
-follower)`` runs one end-to-end replication under an installed
-``FaultInjector`` and asserts the topology converges **automatically** — no
-manual retry call — to bit-identical committed replicas at every tier with
-zero torn stores (``verify_image(deep=True)`` clean everywhere). Fire
-decisions are a pure function of the seed (see ``ft.faults``), so any
-failing cell replays bit-identically from the repro line it prints:
+Every cell of ``(drop | corrupt | delay | crash | bitrot) x (push | fanout
+| relay | follower)`` runs one end-to-end replication under seeded faults
+and asserts the topology converges **automatically** — no manual retry
+call — to bit-identical committed replicas at every tier with zero torn
+stores (``verify_image(deep=True)`` clean everywhere). The first four
+modes strike in-flight (an installed ``FaultInjector`` at the wire/commit
+seams); ``bitrot`` strikes at rest — seeded byte-flips in committed blobs
+(``ft.faults.inject_bitrot``, plus a persisted ``store.write_blob`` flip
+for the follower cell) that the scrub -> repair -> rollback loop must
+detect 100%, heal from ANY peer (source, sibling replica, or a relay's
+own CHILD), and re-verify deep-clean. Fire decisions are a pure function
+of the seed (see ``ft.faults``), so any failing cell replays
+bit-identically from the repro line it prints:
 
     PYTHONPATH=src python -m repro.ft.chaos --seeds 7 \\
         --scenarios relay --modes corrupt
@@ -28,10 +34,10 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
-from .faults import FaultSpec, inject
+from .faults import FaultSpec, inject, inject_bitrot
 from .retry import RetryPolicy
 
-MODES = ("drop", "corrupt", "delay", "crash")
+MODES = ("drop", "corrupt", "delay", "crash", "bitrot")
 SCENARIOS = ("push", "fanout", "relay", "follower")
 
 # fast-converging policy: chaos cells only need *bounded* waits, the
@@ -122,6 +128,41 @@ def _spec(mode: str, match: str) -> FaultSpec:
     return FaultSpec(point="wire.receive_blob", mode=mode, match=match)
 
 
+# ------------------------------------------------------- at-rest bitrot
+def _chunkset(store, name: str, tag: str) -> list:
+    """Every blob hash ``name:tag`` reaches — restricts the bitrot victim
+    pool so the cell knows exactly which image to scrub and repair."""
+    m, _ = store.read_image(name, tag)
+    out = []
+    for lid in m.layer_ids:
+        for rec in store.read_layer(lid).records:
+            out.extend(rec.chunks)
+    return out
+
+
+def _rot_and_heal(victim, name: str, tag: str, peers, seed: int,
+                  count: int = 2) -> int:
+    """The shared bitrot cell body: seeded at-rest flips on ``victim``,
+    then the full self-healing loop — scrub must detect EXACTLY the
+    flipped set (100% detection, no false positives), repair_image must
+    restore it pulling only the damaged bytes from the given peers, and a
+    re-scrub must run clean. Returns the number of flips (the cell's
+    ``fired`` count)."""
+    from ..core import repair_image
+    flips = inject_bitrot(victim.root, seed, count=count,
+                          candidates=_chunkset(victim, name, tag))
+    assert flips, "bitrot found no victim blobs — fixture broken?"
+    want = {h for h, _ in flips}
+    rep = victim.scrub()
+    assert set(rep.corrupt_blob_hashes) == want,         f"scrub detected {rep.corrupt_blob_hashes} != injected {sorted(want)}"
+    rr = repair_image(victim, name, tag, peers=peers, scrub_report=rep)
+    assert rr.verified_clean, "repair did not deep-verify clean"
+    assert rr.wire_amplification <= 1.25,         f"repair over-pulled: {rr.wire_amplification:.2f}x"
+    victim.purge_quarantine()
+    assert victim.scrub().clean, "re-scrub after repair found debris"
+    return len(flips)
+
+
 # -------------------------------------------------------------- scenarios
 def _run_push(base_dir: str, mode: str, seed: int) -> tuple:
     from ..core import push_delta
@@ -130,6 +171,11 @@ def _run_push(base_dir: str, mode: str, seed: int) -> tuple:
     _build_app(src, payloads)
     push_delta(src, dst, "app", "v1")               # warm base, no faults
     _inject_v2(src, payloads)
+    if mode == "bitrot":
+        push_delta(src, dst, "app", "v2")           # commit clean, rot at rest
+        fired = _rot_and_heal(dst, "app", "v2", [src], seed)
+        _assert_converged(src, [dst], "app", "v2")
+        return fired, 0
     policy = RetryPolicy(seed=seed, **_POLICY_KW)
     with inject(seed, _spec(mode, dst.root)) as inj:
         push_delta(src, dst, "app", "v2", retry=policy)
@@ -145,6 +191,13 @@ def _run_fanout(base_dir: str, mode: str, seed: int) -> tuple:
     replicate_fanout(src, [r0, r1, r2], "app", "v1")
     _inject_v2(src, payloads)
     policy = RetryPolicy(seed=seed, **_POLICY_KW)
+    if mode == "bitrot":
+        replicate_fanout(src, [r0, r1, r2], "app", "v2")
+        # heal the rotten replica from a SIBLING, not the source —
+        # any-peer anti-entropy across the fan
+        fired = _rot_and_heal(r1, "app", "v2", [r0], seed)
+        _assert_converged(src, [r0, r1, r2], "app", "v2")
+        return fired, 0
     with inject(seed, _spec(mode, r1.root)) as inj:   # one sick replica
         fan = replicate_fanout(src, [r0, r1, r2], "app", "v2",
                                retry=policy)
@@ -164,6 +217,13 @@ def _run_relay(base_dir: str, mode: str, seed: int) -> tuple:
     relay = RelayNode(mid, children=[e0, e1], retry=policy)
     replicate_fanout(src, [relay], "app", "v1")
     _inject_v2(src, payloads)
+    if mode == "bitrot":
+        replicate_fanout(src, [relay], "app", "v2")
+        # the MID tier rots and heals from its own CHILD — repair runs
+        # the delta machinery in reverse, so direction doesn't matter
+        fired = _rot_and_heal(mid, "app", "v2", [e1], seed)
+        _assert_converged(src, [mid, e0, e1], "app", "v2")
+        return fired, 0
     with inject(seed, _spec(mode, e0.root)) as inj:   # one sick edge
         fan = replicate_fanout(src, [relay], "app", "v2", retry=policy)
     rep = fan.replicas[0]
@@ -197,12 +257,23 @@ def _run_follower(base_dir: str, mode: str, seed: int) -> tuple:
     state2["opt/__step__"][0] = 2
     inject_payload_update(remote, "ckpt", "step-00000001",
                           "step-00000002", {"state": state2})
-    with inject(seed, _spec(mode, local.root)) as inj:
+    if mode == "bitrot":
+        # a persisted write-path flip: the pull COMMITS a corrupt revision
+        # (receive verified the wire bytes, the disk write rotted them) —
+        # the follower's verify gate must catch it pre-swap and heal
+        # in-line from the remote, within the same poll
+        spec = FaultSpec(point="store.write_blob", mode="bitrot",
+                         match=local.root, times=1)
+    else:
+        spec = _spec(mode, local.root)
+    with inject(seed, spec) as inj:
         upd = follower.poll()
     assert upd is not None and upd.step == 2, "follower failed to advance"
     _assert_converged(remote, [local], "ckpt", "step-00000002")
     health = follower.health()
     assert health.consecutive_failures == 0 and health.last_success_step == 2
+    if mode == "bitrot":
+        assert health.corrupt_polls >= 1 and health.repairs >= 1,             "verify gate never engaged under write-path bitrot"
     return inj.fired(), health.retries_spent
 
 

@@ -33,11 +33,24 @@ Fault points currently wired (point / key):
 exactly like a flaky network to the caller; ``CrashInjected`` simulates
 process death — the run aborts mid-flight and the next attempt plays the
 part of the restarted process (crash-atomicity means it converges).
+
+The fifth mode, ``bitrot``, models silent at-rest corruption (a decaying
+disk, not a flaky wire). At a fault point it behaves like ``corrupt`` —
+the crucial difference is WHERE it is aimed: fired at ``store.write_blob``
+the flipped byte is *persisted*, committing a corrupt blob that no
+in-flight check will ever re-read (the torn-write-that-slipped-past-
+adoption case). For corruption of blobs already at rest there is
+``inject_bitrot(root, seed, ...)``, which flips one deterministic byte in
+each selected committed blob file in place. Detection is
+``LayerStore.scrub`` (ft/scrub.py); healing is ``repair_image``
+(core/registry.py); the chaos matrix (ft/chaos.py) soaks every
+(bitrot × scenario) cell to bit-identical deep-verified convergence.
 """
 from __future__ import annotations
 
 import contextlib
 import hashlib
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -68,7 +81,7 @@ class FaultSpec:
     """
 
     point: str
-    mode: str                       # "drop" | "corrupt" | "delay" | "crash"
+    mode: str         # "drop" | "corrupt" | "delay" | "crash" | "bitrot"
     prob: float = 1.0
     match: str = ""
     skip: int = 0
@@ -76,7 +89,8 @@ class FaultSpec:
     delay_s: float = 0.01
 
     def __post_init__(self):
-        if self.mode not in ("drop", "corrupt", "delay", "crash"):
+        if self.mode not in ("drop", "corrupt", "delay", "crash",
+                             "bitrot"):
             raise ValueError(f"unknown fault mode {self.mode!r}")
 
     def matches(self, point: str, key: str) -> bool:
@@ -154,8 +168,10 @@ class FaultInjector:
             if spec.mode == "delay":
                 time.sleep(spec.delay_s)
                 return data
-            # corrupt: flip one deterministic byte; at a data-less point a
-            # corruption manifests as a drop (there is nothing to mangle)
+            # corrupt/bitrot: flip one deterministic byte; at a data-less
+            # point a corruption manifests as a drop (nothing to mangle).
+            # The two modes differ only in aim (see module docstring):
+            # "bitrot" targets write/at-rest points so the flip PERSISTS.
             if data is None or len(data) == 0:
                 raise FaultInjected(
                     f"injected corrupt-drop at {point} ({key[-24:]})")
@@ -198,3 +214,48 @@ def fault_point(point: str, key: str = "",
 def inject(seed: int = 0, *specs: FaultSpec):
     """``with inject(seed, FaultSpec(...), ...) as inj:`` convenience."""
     return FaultInjector(seed, tuple(specs)).active()
+
+
+def inject_bitrot(root: str, seed: int, count: int = 1,
+                  candidates: Optional[List[str]] = None
+                  ) -> List[Tuple[str, int]]:
+    """Flip one byte in each of ``count`` at-rest blob payloads under
+    ``<root>/blobs/sha256`` — the silent-disk-decay fault the scrub/repair
+    loop must detect and heal.
+
+    Victim selection and flip position are pure functions of
+    ``(seed, blob hash)`` (the same SHA-derived draw as the fault points),
+    so a chaos cell replays bit-identically. ``candidates`` restricts the
+    victim pool to those hashes (e.g. one image's chunk set, so the cell
+    knows which image to repair); default is every blob on disk. Flips are
+    applied in place — no injector needs to be installed. Returns
+    ``[(hash, flipped_offset), ...]`` for the detection assertions.
+    """
+    shard_root = os.path.join(root, "blobs", "sha256")
+    if candidates is None:
+        pool = []
+        for sub in sorted(os.listdir(shard_root)):
+            d = os.path.join(shard_root, sub)
+            if os.path.isdir(d):
+                pool.extend(sorted(os.listdir(d)))
+    else:
+        pool = sorted(set(candidates))
+    pool = [h for h in pool
+            if os.path.exists(os.path.join(shard_root, h[:2], h))]
+    if not pool:
+        return []
+    ranked = sorted(pool, key=lambda h: _unit(seed, "bitrot.pick", h, 0))
+    flipped: List[Tuple[str, int]] = []
+    for h in ranked[:max(count, 0)]:
+        path = os.path.join(shard_root, h[:2], h)
+        size = os.path.getsize(path)
+        if size == 0:
+            continue
+        pos = int(_unit(seed, "bitrot.pos", h, 0) * size) % size
+        with open(path, "r+b") as f:
+            f.seek(pos)
+            byte = f.read(1)
+            f.seek(pos)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        flipped.append((h, pos))
+    return flipped

@@ -22,19 +22,30 @@ or dtype moved) falls back to the full reload automatically. With
 (``core.registry.RelayNode``): every pulled delta re-fans to the
 downstream edge stores through the same negotiated plan, streaming from
 the in-flight pull by default.
+
+The serving loop is also the last line of the self-healing blob universe
+(ft/scrub.py + core.registry.repair_image): with ``verify=True`` (the
+default) every pulled revision's consumed blobs are re-hashed BEFORE the
+engine ever sees them; a corrupt revision triggers an in-line
+anti-entropy repair from the followed remote, and if that cannot heal it
+the poll returns None — the engine keeps serving the last-known-good
+weights (``Engine.rollback`` covers the mid-swap failure case) instead
+of crashing or serving torn tensors. ``FollowerHealth.corrupt_polls`` /
+``EngineHealth.rollbacks`` surface both events to fleet controllers.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Iterable, Optional, Sequence, Set
+from typing import Any, Iterable, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import (LayerStore, PushRejected, PushStats, RelayNode,
-                    diff_tensor_records, replicate_fanout)
+                    diff_tensor_records, repair_image, replicate_fanout,
+                    sha256_hex)
 from ..ft.faults import fault_point
 from ..ft.retry import RetryPolicy
 from ..models import decode_step, init_cache, prefill
@@ -106,6 +117,9 @@ class FollowerHealth:
     staleness_s: Optional[float]    # seconds since the last applied update
     retries_spent: int              # in-run retries the pull path consumed
     last_error: Optional[str]
+    corrupt_polls: int = 0          # polls whose revision failed re-hash
+    repairs: int = 0                # in-line repair_image heals attempted
+    last_verify_error: Optional[str] = None   # why the last gate refused
 
 
 @dataclass
@@ -117,6 +131,8 @@ class EngineHealth:
     last_refresh_leaves: int
     last_refresh_step: Optional[int]
     staleness_s: Optional[float]    # seconds since the last weight swap
+    rollbacks: int = 0              # last-known-good restores performed
+    last_rollback_step: Optional[int] = None  # step serving after the last one
 
 
 class Engine:
@@ -128,6 +144,14 @@ class Engine:
         self._refreshes = 0
         self._last_refresh_t: Optional[float] = None
         self._last_refresh_step: Optional[int] = None
+        # last-known-good history (one level deep): the live tree is
+        # stashed at the top of every refresh, so a swap that goes bad —
+        # mid-refresh exception, or a revision rejected after the fact —
+        # can be undone with rollback()
+        self._prev_params: Optional[Any] = None
+        self._prev_step: Optional[int] = None
+        self._rollbacks = 0
+        self._last_rollback_step: Optional[int] = None
         self._prefill = jax.jit(lambda p, t: prefill(cfg, p, t))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
@@ -138,7 +162,9 @@ class Engine:
             last_refresh_leaves=self.last_refresh_leaves,
             last_refresh_step=self._last_refresh_step,
             staleness_s=None if self._last_refresh_t is None
-            else time.monotonic() - self._last_refresh_t)
+            else time.monotonic() - self._last_refresh_t,
+            rollbacks=self._rollbacks,
+            last_rollback_step=self._last_rollback_step)
 
     def refresh(self, params, changed: Optional[Iterable[str]] = None,
                 step: Optional[int] = None) -> int:
@@ -154,6 +180,12 @@ class Engine:
         shared), which is bit-identical to a full reload of the same
         revision. Returns the number of leaves swapped in
         (``last_refresh_leaves`` keeps it for telemetry)."""
+        # stash last-known-good BEFORE any mutation: the sparse path below
+        # is copy-on-write (the stashed tree's spine is never aliased into
+        # the new one), so rollback() after a mid-swap failure is always a
+        # clean restore — and before the first assignment it is a no-op
+        self._prev_params = self.params
+        self._prev_step = self._last_refresh_step
         if changed is None:
             self.params = params
             self.last_refresh_leaves = len(jax.tree.leaves(params))
@@ -193,6 +225,23 @@ class Engine:
         self.last_refresh_leaves = n
         self._stamp_refresh(step)
         return n
+
+    def rollback(self) -> bool:
+        """Restore the param tree that served before the last ``refresh``
+        — the last-known-good escape hatch a follower (or any caller)
+        pulls when a swapped-in revision turns out corrupt or the swap
+        itself died mid-flight. Bit-identical to the previous tree: the
+        stash is the very object that was serving (sparse refreshes never
+        mutate it — copy-on-write). History is deliberately one level
+        deep; returns False when there is nothing to roll back to (fresh
+        engine, or already rolled back)."""
+        if self._prev_params is None:
+            return False
+        self.params, self._prev_params = self._prev_params, None
+        self._last_refresh_step, self._prev_step = self._prev_step, None
+        self._rollbacks += 1
+        self._last_rollback_step = self._last_refresh_step
+        return True
 
     def _stamp_refresh(self, step: Optional[int]) -> None:
         self._refreshes += 1
@@ -302,7 +351,8 @@ class CheckpointFollower:
     def __init__(self, remote, local, image: str = IMAGE, keep: int = 2,
                  sparse: bool = True, children: Sequence = (),
                  source: str = "inflight",
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 verify: bool = True):
         self.remote = remote if isinstance(remote, LayerStore) \
             else LayerStore(str(remote))
         self.local = local if isinstance(local, LayerStore) \
@@ -314,6 +364,7 @@ class CheckpointFollower:
         self.keep = keep
         self.sparse = sparse
         self.retry = retry            # in-run self-healing for the pull
+        self.verify = verify          # re-hash every revision pre-swap
         self.last_step: Optional[int] = None
         self.last_pull: Optional[PushStats] = None
         self.last_update: Optional[SparseUpdate] = None
@@ -324,6 +375,9 @@ class CheckpointFollower:
         self._retries_spent = 0
         self._last_success_t: Optional[float] = None
         self._last_error: Optional[str] = None
+        self._corrupt_polls = 0
+        self._repairs = 0
+        self.last_verify_error: Optional[str] = None
 
     def health(self) -> FollowerHealth:
         """Structured snapshot for fleet controllers: staleness is seconds
@@ -336,7 +390,10 @@ class CheckpointFollower:
             staleness_s=None if self._last_success_t is None
             else time.monotonic() - self._last_success_t,
             retries_spent=self._retries_spent,
-            last_error=self._last_error)
+            last_error=self._last_error,
+            corrupt_polls=self._corrupt_polls,
+            repairs=self._repairs,
+            last_verify_error=self.last_verify_error)
 
     def _pull(self, tag: str) -> Optional[PushStats]:
         """One delta pull (re-fanned to children in relay mode), hardened
@@ -401,6 +458,24 @@ class CheckpointFollower:
             prev_tag = f"step-{self.last_step:08d}"
             changed = changed_tensor_paths(self.local, self.image,
                                            prev_tag, tag)
+        # verify gate: re-hash exactly the blobs this refresh will consume
+        # BEFORE assembling tensors from them. A corrupt revision (at-rest
+        # bit-rot, a persisted torn write) gets one in-line anti-entropy
+        # heal from the followed remote; if that cannot produce a clean
+        # revision the poll returns None WITHOUT advancing last_step — the
+        # engine keeps serving last-known-good weights and the next poll
+        # retries the same tag against a possibly-healthier remote.
+        if self.verify:
+            bad = self._verify_revision(tag, changed)
+            if bad:
+                self._corrupt_polls += 1
+                if self._repair_revision(tag):
+                    bad = self._verify_revision(tag, changed)
+            if bad:
+                self.last_verify_error = (
+                    f"{tag}: {bad[0]}" +
+                    (f" (+{len(bad) - 1} more)" if len(bad) > 1 else ""))
+                return None
         flat = self.local.load_image_payload(
             self.image, tag, names=None if changed is None else changed)
         self.last_step = step
@@ -430,3 +505,71 @@ class CheckpointFollower:
             tensors_loaded=len(flat),
         )
         return self.last_update
+
+    def _verify_revision(self, tag: str,
+                         changed: Optional[Set[str]]) -> List[str]:
+        """Re-hash the local blobs the coming refresh will consume —
+        scoped to the sparse plan's changed tensors when there is one (the
+        unchanged leaves already serve from device memory; their disk
+        state is the background scrub's business, not this hot path's).
+        Returns human-readable problems, empty = clean."""
+        st = self.local
+        problems: List[str] = []
+        try:
+            manifest, _ = st.read_image(self.image, tag)
+            for lid in manifest.layer_ids:
+                layer = st.read_layer(lid, use_cache=False)
+                for rec in layer.records:
+                    if changed is not None and rec.name not in changed:
+                        continue
+                    for h in rec.chunks:
+                        try:
+                            if sha256_hex(st.read_blob(h)) != h:
+                                problems.append(
+                                    f"corrupt blob {h[:12]} ({rec.name})")
+                        except OSError:
+                            problems.append(
+                                f"missing blob {h[:12]} ({rec.name})")
+        except (OSError, ValueError, KeyError) as e:
+            problems.append(f"revision metadata unreadable: {e}")
+        return problems
+
+    def _repair_revision(self, tag: str) -> bool:
+        """One in-line anti-entropy heal of a corrupt pulled revision from
+        the followed remote (core.registry.repair_image: quarantine the
+        bad blobs, pull only the damaged bytes, deep-verify). True = the
+        revision is clean again and the poll may proceed."""
+        try:
+            rep = repair_image(self.local, self.image, tag,
+                               peers=[self.remote])
+        except Exception as e:
+            self.last_verify_error = \
+                f"repair of {tag} failed: {type(e).__name__}: {e}"
+            return False
+        self._repairs += 1
+        return rep.verified_clean
+
+    def poll_and_refresh(self, engine: Engine) -> Optional[SparseUpdate]:
+        """Closed-loop sync: poll once and hot-swap ``engine``, never
+        letting a bad revision take the server down. A wire fault
+        (``ConnectionError`` — which injected chaos faults subclass) is
+        swallowed: the engine keeps serving its current weights and the
+        next call retries. A refresh that dies mid-swap rolls the engine
+        back to the previous committed params (``Engine.rollback``)
+        instead of leaving a torn tree. Returns the applied update, or
+        None when nothing changed or nothing could be SAFELY applied
+        (``health()`` tells the two apart)."""
+        try:
+            upd = self.poll()
+        except ConnectionError:
+            return None               # counted by poll(); serve stale
+        if upd is None:
+            return None
+        try:
+            engine.refresh(upd.params, upd.changed_params, step=upd.step)
+        except Exception as e:
+            engine.rollback()
+            self.last_verify_error = \
+                f"refresh rolled back: {type(e).__name__}: {e}"
+            return None
+        return upd

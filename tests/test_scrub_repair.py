@@ -1,0 +1,575 @@
+"""Self-healing loop: scrub detection, anti-entropy repair, gc/lease
+safety around an in-flight RepairSession, SIGKILL-mid-repair crash
+consistency, the follower's pre-swap verify gate, Engine rollback, and
+the chaos matrix's bitrot cells."""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, RepairFailed,
+                        RepairSession, export_delta, push_delta,
+                        repair_image)
+from repro.ft.faults import FaultSpec, inject, inject_bitrot
+from repro.ft.scrub import N_SHARDS, ScrubReport, load_cursor
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "params", "content"),
+    Instruction("RUN", "opt_init", "content"),
+    Instruction("CMD", "serve", "config"),
+]
+
+
+def mk_store(tmp_path, name="store", chunk=512):
+    return LayerStore(str(tmp_path / name), chunk_bytes=chunk)
+
+
+def payloads(rng, scale=1.0):
+    return {
+        "params": {"w0": (rng.standard_normal(2000) * scale)
+                   .astype(np.float32),
+                   "w1": rng.standard_normal(1000).astype(np.float32)},
+        "opt_init": {"m": np.zeros(500, np.float32)},
+    }
+
+
+def providers(p):
+    return {k: (lambda v=v: v) for k, v in p.items()}
+
+
+def build(store, rng, name="m", tag="v1", scale=1.0):
+    p = payloads(rng, scale)
+    store.build_image(name, tag, INS, providers(p))
+    return p
+
+
+def chunkset(store, name, tag):
+    m, _ = store.read_image(name, tag)
+    return [h for lid in m.layer_ids
+            for rec in store.read_layer(lid).records
+            for h in rec.chunks]
+
+
+def blob_snapshot(store):
+    out = {}
+    for dirp, _, files in os.walk(os.path.join(store.root, "blobs")):
+        for f in files:
+            with open(os.path.join(dirp, f), "rb") as fh:
+                out[f] = fh.read()
+    return out
+
+
+# ------------------------------------------------------------------ scrub
+def test_scrub_clean_store_no_findings(tmp_path, rng):
+    store = mk_store(tmp_path)
+    build(store, rng)
+    rep = store.scrub()
+    assert rep.complete and rep.clean
+    assert rep.blobs_scanned > 0 and rep.bytes_scanned > 0
+    assert rep.layers_scanned == 4 and rep.images_scanned == 1
+
+
+def test_scrub_detects_every_flip_with_attribution(tmp_path, rng):
+    """100% detection, zero false positives, findings attributed to the
+    committed image that references the rotten blob."""
+    store = mk_store(tmp_path)
+    build(store, rng)
+    flips = inject_bitrot(store.root, seed=3, count=3)
+    assert len(flips) == 3
+    rep = store.scrub()
+    assert set(rep.corrupt_blob_hashes) == {h for h, _ in flips}
+    for f in rep.corruptions:
+        assert f.kind == "corrupt_blob"
+        assert f.image == "m" and f.tag == "v1" and f.layer_id
+
+
+def test_scrub_missing_blob_and_orphans(tmp_path, rng):
+    store = mk_store(tmp_path)
+    build(store, rng)
+    lost = chunkset(store, "m", "v1")[0]
+    os.remove(store._blob_path(lost))
+    # plant debris: an unreferenced blob and an orphan descriptor —
+    # flushed, because a blob still in the open batch transaction is
+    # in-flight state the scrub rightly skips
+    store.write_blob("ab" + "0" * 62, b"debris")
+    store.sync_for_commit()
+    orphan_lid = "c" * 32
+    with open(store._layer_path(orphan_lid), "wb") as f:
+        f.write(b"{}")
+    rep = store.scrub()
+    kinds = sorted(f.kind for f in rep.findings)
+    assert kinds == ["missing_blob", "orphan_blob", "orphan_layer"]
+    assert rep.corrupt_blob_hashes == [lost]
+    assert not rep.clean and rep.complete
+
+
+def test_scrub_corrupt_descriptor_and_config_lock(tmp_path, rng):
+    store = mk_store(tmp_path)
+    build(store, rng)
+    m, _ = store.read_image("m", "v1")
+    lp = store._layer_path(m.layer_ids[1])
+    raw = open(lp, "rb").read()
+    with open(lp, "wb") as f:                  # truncate: unreadable JSON
+        f.write(raw[:len(raw) // 2])
+    store._layer_cache.clear()
+    rep = store.scrub()
+    assert [f.kind for f in rep.corruptions] == ["layer_unreadable"]
+    assert rep.corruptions[0].layer_id == m.layer_ids[1]
+
+
+def test_scrub_sliced_pass_resumes_and_unions_to_full(tmp_path, rng):
+    store = mk_store(tmp_path)
+    build(store, rng)
+    flips = inject_bitrot(store.root, seed=7, count=2)
+    full = store.scrub()
+    store.scrub(reset=True)                    # discard that pass's cursor
+    total, slices = ScrubReport(), 0
+    while True:
+        part = store.scrub(max_items=2)
+        assert part.blobs_scanned >= 1         # every slice makes progress
+        total.merge(part)
+        slices += 1
+        if part.complete:
+            break
+        # the persisted cursor is what makes the pass resumable
+        assert load_cursor(store.root) == part.next_shard > 0
+        assert slices <= N_SHARDS + 4
+    assert slices > 1
+    assert total.complete and load_cursor(store.root) == 0
+    assert total.corrupt_blob_hashes == full.corrupt_blob_hashes == \
+        sorted(h for h, _ in flips)
+    assert total.blobs_scanned == full.blobs_scanned
+
+
+def test_scrub_skips_quarantine_and_inflight(tmp_path, rng):
+    store = mk_store(tmp_path)
+    build(store, rng)
+    victim = chunkset(store, "m", "v1")[0]
+    inject_bitrot(store.root, seed=1, count=1, candidates=[victim])
+    assert store.quarantine_blob(victim)
+    rep = store.scrub()
+    # the quarantined copy is out of the namespace: the finding is now
+    # "missing", never "corrupt", and the quarantine dir isn't walked
+    assert [f.kind for f in rep.corruptions] == ["missing_blob"]
+    assert store.quarantined_blobs() == [victim]
+
+
+# --------------------------------------------------- incremental holdings
+def test_holdings_incremental_equals_rebuild(tmp_path, rng):
+    """Property-style: after any seeded interleaving of builds and
+    removals, the incrementally-maintained index equals a cold rebuild by
+    a SECOND store instance over the same root (``fresh=True`` on the
+    same instance would replace the cache under test)."""
+    for seed in (0, 1, 2):
+        r = np.random.default_rng(seed)
+        store = mk_store(tmp_path, name=f"hold{seed}")
+        live = []
+        for step in range(14):
+            if live and r.random() < 0.35:
+                name, tag = live.pop(int(r.integers(len(live))))
+                store.remove_image(name, tag)
+            else:
+                name = f"img{int(r.integers(3))}"
+                tag = f"t{step}"
+                p = payloads(r, scale=float(r.integers(1, 4)))
+                store.build_image(name, tag, INS, providers(p))
+                live.append((name, tag))
+            for window in (2, 8):
+                got = store.holdings_index(tag_window=window)
+                want = LayerStore(store.root, chunk_bytes=512) \
+                    .holdings_index(tag_window=window)
+                assert got.committed_layers == want.committed_layers
+                assert got.by_family == want.by_family
+                assert got.known_chunks == want.known_chunks
+                assert got.images == want.images
+
+
+def test_holdings_cache_falls_back_to_rebuild_on_stale(tmp_path, rng):
+    """An update the incremental path can't apply exactly (overwriting an
+    existing tag) drops the cached window; the next read rebuilds."""
+    store = mk_store(tmp_path)
+    build(store, rng)
+    store.holdings_index(tag_window=8)
+    build(store, rng, tag="v1", scale=2.0)     # tag overwrite
+    got = store.holdings_index(tag_window=8)
+    want = LayerStore(store.root, chunk_bytes=512).holdings_index(
+        tag_window=8)
+    assert got.by_family == want.by_family
+    assert got.known_chunks == want.known_chunks
+
+
+# ----------------------------------------------------------------- repair
+def test_repair_pulls_only_damaged_bytes_counter_proved(tmp_path, rng):
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    good = blob_snapshot(dst)
+    flips = inject_bitrot(dst.root, seed=5, count=3)
+    damaged = {h for h, _ in flips}
+    rep = dst.scrub()
+
+    reads = []
+    orig = src.read_blob
+    src.read_blob = lambda h: (reads.append(h), orig(h))[1]
+    rr = repair_image(dst, "m", "v1", peers=[src], scrub_report=rep)
+    del src.read_blob
+
+    assert rr.verified_clean and rr.repaired_blobs == 3
+    assert set(reads) == damaged               # ONLY the damaged blobs
+    assert rr.wire_amplification <= 1.25
+    assert blob_snapshot(dst) == good          # bit-identical restore
+    assert set(dst.quarantined_blobs()) == damaged
+    assert dst.verify_image("m", "v1", deep=True) == []
+
+
+def test_repair_without_scrub_report_plans_itself(tmp_path, rng):
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    inject_bitrot(dst.root, seed=9, count=2)
+    rr = repair_image(dst, "m", "v1", peers=[src])
+    assert rr.verified_clean and rr.repaired_blobs == 2
+    assert dst.scrub().clean
+
+
+def test_repair_from_offline_bundle_peer(tmp_path, rng):
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    good = blob_snapshot(dst)
+    bundle_bytes = export_delta(src, "m", "v1")
+    inject_bitrot(dst.root, seed=4, count=2)
+    rr = repair_image(dst, "m", "v1", peers=[bundle_bytes])
+    assert rr.verified_clean
+    assert blob_snapshot(dst) == good
+
+
+def test_repair_any_peer_fallback_skips_rotten_copies(tmp_path, rng):
+    """A peer whose own copy is ALSO rotten is skipped per blob; the next
+    peer sources it — any-peer anti-entropy."""
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    sick_peer = mk_store(tmp_path, "sick")
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, sick_peer, "m", "v1")
+    push_delta(src, dst, "m", "v1")
+    flips = inject_bitrot(dst.root, seed=6, count=2)
+    damaged = sorted(h for h, _ in flips)
+    # the first peer's copies of the SAME blobs are rotten too
+    inject_bitrot(sick_peer.root, seed=1, count=2, candidates=damaged)
+    rr = repair_image(dst, "m", "v1", peers=[sick_peer, src])
+    assert rr.verified_clean
+    # both sick copies were pulled, discarded on re-hash, re-pulled good
+    assert rr.bytes_pulled > rr.damaged_bytes
+    assert all(rr.peer_used[h] == src.root for h in damaged)
+
+
+def test_repair_unsourceable_raises_and_force_overrides(tmp_path, rng):
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    flips = inject_bitrot(dst.root, seed=8, count=2)
+    empty = mk_store(tmp_path, "empty")
+    with pytest.raises(RepairFailed) as ei:
+        repair_image(dst, "m", "v1", peers=[empty])
+    assert sorted(ei.value.report.unsourced) == \
+        sorted(h for h, _ in flips)
+    # the bad bytes are OUT of the namespace either way: visibly
+    # incomplete, never silently corrupt
+    assert set(dst.quarantined_blobs()) == {h for h, _ in flips}
+    problems = dst.verify_image("m", "v1", deep=True)
+    assert problems and all("missing" in p for p in problems)
+    rr = repair_image(dst, "m", "v1", peers=[empty], force=True)
+    assert not rr.verified_clean and len(rr.unsourced) == 2
+    # a later retry against a healthy peer converges
+    assert repair_image(dst, "m", "v1", peers=[src]).verified_clean
+
+
+def test_repair_refetches_corrupt_descriptor_under_config_lock(tmp_path,
+                                                               rng):
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    good = blob_snapshot(dst)
+    m, _ = dst.read_image("m", "v1")
+    lp = dst._layer_path(m.layer_ids[1])
+    raw = open(lp, "rb").read()
+    with open(lp, "wb") as f:
+        f.write(raw[:len(raw) // 2] + b"X" + raw[len(raw) // 2 + 1:])
+    dst._layer_cache.clear()
+    rep = dst.scrub()
+    rr = repair_image(dst, "m", "v1", peers=[src], scrub_report=rep)
+    assert rr.repaired_layers == 1 and rr.verified_clean
+    assert blob_snapshot(dst) == good
+
+
+def test_repair_rejects_descriptor_diverging_from_config_lock(tmp_path,
+                                                              rng):
+    """The local committed config is the trust anchor: a peer cannot swap
+    in a descriptor the config never vouched for."""
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    m, _ = dst.read_image("m", "v1")
+    lid = m.layer_ids[1]
+    os.remove(dst._layer_path(lid))
+    dst._layer_cache.clear()
+    # the peer serves a VALID but different descriptor under the same id
+    evil = mk_store(tmp_path, "evil")
+    build(evil, np.random.default_rng(99), scale=3.0)
+    em, _ = evil.read_image("m", "v1")
+    forged = evil.read_layer(em.layer_ids[1], use_cache=False)
+    object.__setattr__(forged, "layer_id", lid) if False else None
+    forged.layer_id = lid
+    evil.write_layer(forged)
+    evil._layer_cache.clear()
+
+    class _Evil:
+        store = evil
+    with pytest.raises(RepairFailed) as ei:
+        repair_image(dst, "m", "v1", peers=[_Evil()])
+    assert f"layer:{lid}" in ei.value.report.unsourced
+    assert repair_image(dst, "m", "v1", peers=[src]).verified_clean
+
+
+# ----------------------------------------------------- gc vs repair races
+def test_gc_does_not_sweep_blobs_pinned_by_repair_session(tmp_path, rng):
+    """A corrupt descriptor makes gc's mark phase under-count (it cannot
+    read the chunk list), so without the session's pin the damaged
+    layer's GOOD sibling blobs would be swept mid-repair."""
+    src = mk_store(tmp_path, "src")
+    build(src, rng)
+    dst = mk_store(tmp_path, "dst")
+    push_delta(src, dst, "m", "v1")
+    good = blob_snapshot(dst)
+    m, _ = dst.read_image("m", "v1")
+    lp = dst._layer_path(m.layer_ids[1])
+    with open(lp, "wb") as f:
+        f.write(b"not json")
+    dst._layer_cache.clear()
+
+    session = RepairSession(dst, "m", "v1", peers=[src]).plan()
+    assert session.damaged_layers == [m.layer_ids[1]]
+    swept = dst.gc()                     # concurrent retention pass
+    assert swept["blobs_swept"] == 0, \
+        "gc swept blobs pinned by the session"
+    # the lease the session holds also blocks tag removal mid-repair
+    assert dst.leased("m", "v1")
+    assert not dst.remove_image("m", "v1")
+    rr = session.run()
+    assert rr.verified_clean
+    assert blob_snapshot(dst) == good
+    assert not dst.leased("m", "v1")     # released with the session
+    # with the pin gone, gc still sweeps nothing (all referenced again)
+    assert dst.gc()["blobs_swept"] == 0
+
+
+def test_scrub_concurrent_with_gc_stays_quiet(tmp_path, rng):
+    """A scrub slice interleaved with gc over a healthy store must not
+    produce findings (gc removes only unreferenced files; scrub flags
+    only referenced ones)."""
+    store = mk_store(tmp_path)
+    build(store, rng)
+    build(store, rng, tag="v2", scale=2.0)
+    store.remove_image("m", "v1")
+    total = ScrubReport()
+    while True:
+        part = store.scrub(max_items=2)
+        total.merge(part)
+        store.gc()                       # sweep between every slice
+        if part.complete:
+            break
+    assert total.corruptions == []
+
+
+# ------------------------------------------------------ SIGKILL mid-repair
+def _kill9_repair(tmp_path, kill_point):
+    root = str(tmp_path)
+    script = textwrap.dedent(f"""
+        import os, signal
+        import numpy as np
+        from repro.core import Instruction, LayerStore, push_delta
+        import repro.core.registry as registry
+        from repro.core import repair_image
+        from repro.ft.faults import inject_bitrot
+
+        ins = [Instruction("FROM", "base", "config"),
+               Instruction("COPY", "params", "content"),
+               Instruction("CMD", "serve", "config")]
+        root = {root!r}
+        src = LayerStore(os.path.join(root, "src"), chunk_bytes=512)
+        src.build_image("m", "v1", ins,
+                        {{"params": lambda: {{"w": np.arange(
+                            3000, dtype=np.float32)}}}})
+        dst = LayerStore(os.path.join(root, "dst"), chunk_bytes=512)
+        push_delta(src, dst, "m", "v1")
+        flips = inject_bitrot(dst.root, seed=2, count=2)
+        with open(os.path.join(root, "flips.txt"), "w") as f:
+            f.write("\\n".join(h for h, _ in flips))
+        orig_fp = registry.fault_point
+        def dying_fp(point, key="", data=None):
+            if point == {kill_point!r}:
+                os.kill(os.getpid(), signal.SIGKILL)
+            return orig_fp(point, key, data)
+        registry.fault_point = dying_fp
+        print("READY", flush=True)
+        repair_image(dst, "m", "v1", peers=[src])
+        print("UNREACHABLE", flush=True)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env,
+                       timeout=120)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert "READY" in r.stdout and "UNREACHABLE" not in r.stdout
+    with open(os.path.join(root, "flips.txt")) as f:
+        return set(f.read().split())
+
+
+@pytest.mark.parametrize("kill_point", ["repair.pull", "repair.commit"])
+def test_kill9_mid_repair_no_worse_then_retry_converges(tmp_path,
+                                                        kill_point):
+    """SIGKILL during the pull (quarantines done, swap-ins not) and at
+    the commit probe (swap-ins done, flush not): either way the store is
+    no worse than before — corrupt blobs are in quarantine, nothing torn
+    was swapped in — and a clean retry converges to deep-verified."""
+    flipped = _kill9_repair(tmp_path, kill_point)
+    src = LayerStore(str(tmp_path / "src"), chunk_bytes=512)
+    dst = LayerStore(str(tmp_path / "dst"), chunk_bytes=512)
+    # invariant: visibly-incomplete at worst — NO corrupt blob remains
+    # addressable (quarantine happened before any pull), and whatever WAS
+    # swapped back in re-hashes clean
+    rep = dst.scrub()
+    assert {f.kind for f in rep.corruptions} <= {"missing_blob"}
+    assert flipped <= set(dst.quarantined_blobs()) | \
+        {f.blob for f in rep.findings} | set()
+    assert set(dst.quarantined_blobs()) == flipped
+    rr = repair_image(dst, "m", "v1", peers=[src])
+    assert rr.verified_clean
+    assert dst.verify_image("m", "v1", deep=True) == []
+    assert dst.scrub().clean
+
+
+# --------------------------------------------- follower gate + engine
+def _ckpt_fixture(tmp_path, rng):
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.serve.engine import CheckpointFollower
+    params = {"w": rng.standard_normal(2000).astype(np.float32)}
+    opt = {"m": np.zeros(500, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "train"), "t",
+                            CheckpointPolicy(async_write=False,
+                                             chunk_bytes=512))
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"), keep=3)
+    assert fol.poll().step == 0
+    return mgr, fol, params, opt
+
+
+def test_follower_gate_heals_persisted_bitrot_in_line(tmp_path, rng):
+    mgr, fol, params, opt = _ckpt_fixture(tmp_path, rng)
+    params2 = {"w": params["w"] + 1.0}
+    mgr.save(1, params2, opt)
+    with inject(11, FaultSpec(point="store.write_blob", mode="bitrot",
+                              match=fol.local.root, times=1)) as inj:
+        upd = fol.poll()
+    assert inj.fired() >= 1
+    assert upd is not None and upd.step == 1
+    h = fol.health()
+    assert h.corrupt_polls == 1 and h.repairs == 1
+    # the healed local revision is bit-identical to the trainer's
+    tag = "step-00000001"
+    assert fol.local.verify_image(fol.image, tag, deep=True) == []
+    flat = fol.local.load_image_payload(fol.image, tag)
+    assert np.array_equal(flat["params/w"], params2["w"])
+
+
+def test_follower_unhealable_keeps_last_step_and_retries(tmp_path, rng):
+    mgr, fol, params, opt = _ckpt_fixture(tmp_path, rng)
+    params2 = {"w": params["w"] + 1.0}
+    mgr.save(1, params2, opt)
+    with inject(13, FaultSpec(point="store.write_blob", mode="bitrot",
+                              match=fol.local.root, times=1),
+                FaultSpec(point="repair.pull", mode="drop", times=None)):
+        upd = fol.poll()
+    assert upd is None and fol.last_step == 0       # kept last-known-good
+    h = fol.health()
+    assert h.corrupt_polls == 1 and h.last_verify_error
+    assert h.consecutive_failures == 0              # degraded, not sick
+    upd = fol.poll()                                # faults gone: self-heal
+    assert upd is not None and upd.step == 1
+    assert fol.local.verify_image(fol.image, "step-00000001",
+                                  deep=True) == []
+
+
+def test_engine_rollback_restores_bit_identical_params(rng):
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import Engine
+    cfg = get_smoke_config("yi-6b")
+    from repro.models import init_params
+    p1 = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, p1, max_len=32)
+    assert not eng.rollback()                       # no history yet
+    eng.refresh(p1, step=1)
+    want = [np.asarray(x) for x in jax.tree.leaves(p1)]
+    p2 = jax.tree.map(lambda x: x + 1.0, p1)
+    eng.refresh(p2, step=2)
+    assert eng.rollback()
+    got = [np.asarray(x) for x in jax.tree.leaves(eng.params)]
+    assert all(np.array_equal(a, b) for a, b in zip(got, want))
+    h = eng.health()
+    assert h.rollbacks == 1 and h.last_rollback_step == 1
+    assert not eng.rollback()                       # history is one deep
+
+
+def test_poll_and_refresh_rolls_back_on_mid_swap_failure(tmp_path, rng):
+    jax = pytest.importorskip("jax")
+    mgr, fol, params, opt = _ckpt_fixture(tmp_path, rng)
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import Engine
+    cfg = get_smoke_config("yi-6b")
+    from repro.models import init_params
+    live = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, live, max_len=32)
+    eng.refresh(live, step=0)
+    want = [np.asarray(x) for x in jax.tree.leaves(live)]
+    mgr.save(1, {"w": params["w"] + 1.0}, opt)
+    # the checkpoint's tree doesn't match the live engine's: the sparse /
+    # full swap applies, but a stale sparse plan would raise — simulate a
+    # mid-swap death via a poisoned refresh
+    orig_refresh = eng.refresh
+
+    def dying_refresh(*a, **k):
+        orig_refresh(*a, **k)
+        raise RuntimeError("device OOM mid-swap")
+    eng.refresh = dying_refresh
+    upd = fol.poll_and_refresh(eng)
+    eng.refresh = orig_refresh
+    assert upd is None
+    assert "rolled back" in (fol.last_verify_error or "")
+    got = [np.asarray(x) for x in jax.tree.leaves(eng.params)]
+    assert all(np.array_equal(a, b) for a, b in zip(got, want))
+    assert eng.health().rollbacks == 1
+
+
+# ------------------------------------------------------------ chaos cells
+@pytest.mark.parametrize("scenario", ["push", "fanout", "relay",
+                                      "follower"])
+def test_chaos_bitrot_cell_converges(tmp_path, scenario):
+    from repro.ft.chaos import run_cell
+    cell = run_cell(scenario, "bitrot", seed=0, base_dir=tmp_path)
+    assert cell.ok and cell.fired >= 1
