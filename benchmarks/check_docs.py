@@ -67,6 +67,19 @@ CLAIMS = [
      "BENCH_scrub_repair.json", "repair.within_budget", True, True),
     ("README: scrub 'sliced pass unions to the full verdict'",
      "BENCH_scrub_repair.json", "sliced.union_equals_full", True, True),
+    ("README/ARCHITECTURE: squash 'one bundle <= 1.25x min(per-hop sum, "
+     "full)'",
+     "BENCH_squash_pull.json", "publish.squash_within_budget", True, True),
+    ("README/ARCHITECTURE: squash 'replays bit-identically'",
+     "BENCH_squash_pull.json", "publish.verified_bit_identical",
+     True, True),
+    ("README/ARCHITECTURE: passive pull 'ZERO negotiation round-trips'",
+     "BENCH_squash_pull.json", "follower.negotiation_rounds", 0, 0),
+    ("README: passive pull '<= 1.25x the cheapest advertised chain'",
+     "BENCH_squash_pull.json", "follower.pulled_within_budget",
+     True, True),
+    ("README: passive pull 'converges deep-verified, bit-identical'",
+     "BENCH_squash_pull.json", "follower.bit_identical", True, True),
 ]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

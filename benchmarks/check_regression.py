@@ -142,6 +142,22 @@ INVARIANTS = [
     # ... and a sliced, cursor-resumed scrub pass unions to the same
     # verdict as one full pass
     ("scrub_repair.json", "sliced.union_equals_full", True),
+    # squashed static deltas + passive registry: merging 8 per-commit
+    # deltas into one bundle stays within 1.25x of min(sum per-hop, full)
+    # — repeated same-chunk overwrites collapse to the final bytes —
+    # and replays bit-identically on a scratch store (deep verify +
+    # per-chunk byte compare) ...
+    ("squash_pull.json", "publish.squash_within_budget", True),
+    ("squash_pull.json", "publish.verified_bit_identical", True),
+    # ... a follower 8 commits behind converges from plain published
+    # files with ZERO negotiation round-trips (DeltaReceiver.negotiate
+    # monkeypatch-counted), in ONE applied hop, within 1.25x of the
+    # cheapest ADVERTISED chain, deep-verified and bit-identical
+    ("squash_pull.json", "follower.negotiation_rounds", 0),
+    ("squash_pull.json", "follower.hops_applied", 1),
+    ("squash_pull.json", "follower.pulled_within_budget", True),
+    ("squash_pull.json", "follower.converged_deep_verified", True),
+    ("squash_pull.json", "follower.bit_identical", True),
 ]
 
 

@@ -52,9 +52,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import (BuildReport, Instruction, LayerStore, RelayNode,
-                    diff_image, fingerprint_tree, fingerprint_tree_packed,
-                    inject_image_multi, push_delta, replicate_fanout)
+from ..core import (BuildReport, Instruction, LayerStore, PassiveRegistry,
+                    RelayNode, diff_image, fingerprint_tree,
+                    fingerprint_tree_packed, inject_image_multi, push_delta,
+                    replicate_fanout)
 
 
 def flatten_tree(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -174,6 +175,15 @@ class CheckpointPolicy:
                                       # fsyncs defer to one concurrent
                                       # flush at the manifest commit point
                                       # ("full" = seed per-write fsyncs)
+    # passive-registry publish-on-save policy (active only when the
+    # manager is given a ``registry=``): after each save, advertise a
+    # full head bundle plus one squashed bundle per span, where span k
+    # reaches back k COMMITTED step tags (not k raw steps — saves land
+    # every ``every_steps`` and retention prunes, so committed tags are
+    # the only honest distance metric). (1, 4, 8) keeps a fresh edge one
+    # tiny hop from head while an edge that slept through 8 saves still
+    # finds a single squashed bundle instead of a full pull.
+    publish_spans: Tuple[int, ...] = (1, 4, 8)
 
 
 class CheckpointManager:
@@ -197,7 +207,8 @@ class CheckpointManager:
                  policy: Optional[CheckpointPolicy] = None,
                  image: Optional[str] = None,
                  base_image: Optional[Tuple[str, str]] = None,
-                 store: Optional[LayerStore] = None):
+                 store: Optional[LayerStore] = None,
+                 registry=None):
         self.policy = policy or CheckpointPolicy()
         # a shared store keeps ITS chunking/durability: tenants of one
         # universe must agree on chunk geometry or dedup silently dies
@@ -207,6 +218,16 @@ class CheckpointManager:
         self.image = image or self.IMAGE
         self.base_image = base_image
         self.arch = arch
+        # passive bundle registry to publish into after each save (a
+        # PassiveRegistry, or a local directory path). Publishing is
+        # best-effort: see _publish.
+        self.registry = registry if registry is None or \
+            isinstance(registry, PassiveRegistry) \
+            else PassiveRegistry(str(registry))
+        if self.registry is not None:
+            self.registry.attach_gc(self.store, self.image)
+        self.last_publish = None
+        self.last_publish_error: Optional[str] = None
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[Future] = None
         self._last_fps: Dict[str, np.ndarray] = {}
@@ -307,6 +328,7 @@ class CheckpointManager:
                 self._compute_fps(payloads, stats)
             report.bytes_d2h += stats.get("bytes_d2h", 0)
         self._gc()
+        self._publish()
         return report
 
     def _save_incremental(self, step: int,
@@ -345,6 +367,7 @@ class CheckpointManager:
         if self.policy.use_fingerprints:
             self._last_fps = new_fps or self._last_fps
         self._gc()
+        self._publish()
         return report
 
     def _gc(self) -> None:
@@ -352,6 +375,32 @@ class CheckpointManager:
         thread, so no batch transaction is open; LayerStore.gc additionally
         refuses to sweep anything still dirty in an open one."""
         prune_steps(self.store, self.image, self.policy.keep)
+
+    def _publish(self) -> None:
+        """Advertise the just-committed head in the passive bundle
+        registry (``policy.publish_spans``): a full bundle plus one
+        squashed bundle per span back over the committed step tags.
+        Best-effort by contract — a dead object store must never fail a
+        save, so every error is swallowed into ``last_publish_error``
+        and the next save's publish retries (the index stays
+        stale-but-consistent in the meantime, which followers already
+        treat as a fall-back signal)."""
+        if self.registry is None:
+            return
+        try:
+            steps = sorted(s for t in self.store.list_tags(self.image)
+                           if (s := step_of_tag(t)) is not None)
+            if not steps:
+                return
+            froms = [self.tag_of(steps[-1 - span])
+                     for span in self.policy.publish_spans
+                     if span < len(steps)]
+            self.last_publish = self.registry.publish_image(
+                self.store, self.image, self.tag_of(steps[-1]),
+                from_tags=froms)
+            self.last_publish_error = None
+        except Exception as e:
+            self.last_publish_error = f"{type(e).__name__}: {e}"
 
     # --------------------------------------------------------- replication
     def replicate(self, remote=None, step: Optional[int] = None,

@@ -6,8 +6,9 @@ verifying registry — Docker's layer system re-built for JAX training state.
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, bytes_to_tensor,
                       chunk_tensor, hash_chunks, hash_pool, iter_chunks,
                       sha256_hex, tensor_chunk_bytes, tensor_to_bytes)
-from .delta import (DeltaBundle, DeltaFormatError, decode_delta,
-                    encode_delta)
+from .delta import (BundleEntry, BundleIndex, DeltaBundle, DeltaFormatError,
+                    compose_delta_records, decode_delta, decode_index,
+                    encode_delta, encode_index, plan_bundle_chain)
 from .diff import (ChunkEdit, LayerDiff, diff_image, diff_manifests,
                    diff_layer_fingerprint, diff_layer_host,
                    diff_tensor_records, locate_changed_layers)
@@ -19,20 +20,23 @@ from .inject import (StructureChangeError, apply_edits, clone_layer,
                      inject_image, inject_image_multi,
                      inject_payload_update)
 from .manifest import (ImageConfig, Instruction, LayerDescriptor, Manifest,
-                       chain_checksum, content_checksum,
+                       chain_checksum, content_checksum, history_delta_chain,
                        injection_history_entry, new_uuid)
-from .registry import (DeltaReceiver, FanoutStats, HaveSet, PushRejected,
-                       PushStats, RelayNode, RepairFailed, RepairReport,
-                       RepairSession, ReplicaResult, export_delta,
-                       import_delta, pull, pull_delta, push, push_delta,
-                       repair_image, replicate_fanout)
+from .registry import (DeltaReceiver, FanoutStats, HaveSet, PassiveRegistry,
+                       PushRejected, PushStats, RelayNode, RepairFailed,
+                       RepairReport, RepairSession, ReplicaResult,
+                       export_delta, import_delta, pull, pull_delta, push,
+                       push_delta, repair_image, replicate_fanout,
+                       squash_deltas, verify_squashed_bundle)
 from .store import BuildReport, HoldingsIndex, LayerStore
 
 __all__ = [
     "DEFAULT_CHUNK_BYTES", "TensorRecord", "bytes_to_tensor", "chunk_tensor",
     "hash_chunks", "hash_pool", "iter_chunks", "sha256_hex",
-    "tensor_chunk_bytes", "tensor_to_bytes", "DeltaBundle",
-    "DeltaFormatError", "decode_delta", "diff_manifests", "encode_delta",
+    "tensor_chunk_bytes", "tensor_to_bytes", "BundleEntry", "BundleIndex",
+    "DeltaBundle", "DeltaFormatError", "compose_delta_records",
+    "decode_delta", "decode_index", "diff_manifests", "encode_delta",
+    "encode_index", "plan_bundle_chain",
     "ChunkEdit", "LayerDiff", "diff_image",
     "diff_layer_fingerprint", "diff_layer_host", "diff_tensor_records",
     "locate_changed_layers",
@@ -42,10 +46,12 @@ __all__ = [
     "StructureChangeError", "apply_edits", "clone_layer", "inject_image",
     "inject_image_multi", "inject_payload_update", "ImageConfig",
     "Instruction", "LayerDescriptor", "Manifest", "chain_checksum",
-    "content_checksum", "injection_history_entry", "new_uuid",
-    "DeltaReceiver", "FanoutStats", "HaveSet", "PushRejected", "PushStats",
-    "RelayNode", "RepairFailed", "RepairReport", "RepairSession",
-    "ReplicaResult", "export_delta", "import_delta", "pull",
+    "content_checksum", "history_delta_chain", "injection_history_entry",
+    "new_uuid",
+    "DeltaReceiver", "FanoutStats", "HaveSet", "PassiveRegistry",
+    "PushRejected", "PushStats", "RelayNode", "RepairFailed", "RepairReport",
+    "RepairSession", "ReplicaResult", "export_delta", "import_delta", "pull",
     "pull_delta", "push", "push_delta", "repair_image", "replicate_fanout",
+    "squash_deltas", "verify_squashed_bundle",
     "BuildReport", "HoldingsIndex", "LayerStore",
 ]

@@ -28,10 +28,12 @@ available to negotiate a have-set with.
 """
 from __future__ import annotations
 
+import hashlib
+import hmac
 import json
 import struct
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .chunker import sha256_hex
 from .manifest import ImageConfig, LayerDescriptor, Manifest, dumps
@@ -145,3 +147,193 @@ def decode_delta(data: bytes) -> DeltaBundle:
         rekey=dict(header.get("rekey", {})),
         blobs=blobs,
     )
+
+
+# --------------------------------------------------------------- squashing
+
+def compose_delta_records(records: Sequence[dict]) -> Dict[str, Tuple[str, bool]]:
+    """Chain a contiguous run of per-commit delta records end-to-end.
+
+    Each record (``injection_history_entry``'s ``delta``) maps
+    ``{new_layer_id: old_layer_id}`` three ways — ``injected`` and
+    ``rederived`` (content changed) and ``rekeyed`` (content identical,
+    only the chain checksum moved). Composing the run means following
+    each layer's identity through every hop: a layer injected at hop 2
+    and re-keyed at hops 3..k is ONE content change against the base,
+    and a layer only ever re-keyed is none at all.
+
+    Returns ``{final_layer_id: (base_layer_id, content_changed)}`` for
+    every layer id touched anywhere in the run, keyed by the id it ends
+    the run with. Layers absent from the map were never touched (their
+    id is shared with the base verbatim). Intermediate hops' chunk lists
+    are deliberately NOT composed here — ``squash_deltas`` derives the
+    final chunk set from the store so same-chunk overwrites collapse to
+    the final bytes by construction (the capped per-record chunk lists
+    are advisory)."""
+    origin: Dict[str, Tuple[str, bool]] = {}
+    for record in records:
+        step: Dict[str, Tuple[str, bool]] = {}
+        for kind, changes in (("injected", True), ("rederived", True),
+                              ("rekeyed", False)):
+            for new, old in (record.get(kind) or {}).items():
+                base, changed = origin.pop(old, (old, False))
+                step[new] = (base, changed or changes)
+        origin.update(step)
+    return origin
+
+
+# ------------------------------------------------------------ bundle index
+
+INDEX_VERSION = 1
+
+
+@dataclass
+class BundleEntry:
+    """One published static bundle: apply on ``from_tag`` to reach
+    ``to_tag``. ``from_tag == ""`` is a FULL bundle — applicable from
+    nothing (and therefore from any state). ``path`` is relative to the
+    image's directory in the passive registry; ``size``/``sha256`` are
+    the advertised wire cost and the content address a fetcher must
+    verify before decoding."""
+
+    from_tag: str
+    to_tag: str
+    path: str
+    size: int
+    sha256: str
+
+    def to_json(self) -> dict:
+        return {"from": self.from_tag, "to": self.to_tag,
+                "path": self.path, "size": int(self.size),
+                "sha256": self.sha256}
+
+    @staticmethod
+    def from_json(d: dict) -> "BundleEntry":
+        return BundleEntry(from_tag=str(d["from"]), to_tag=str(d["to"]),
+                           path=str(d["path"]), size=int(d["size"]),
+                           sha256=str(d["sha256"]))
+
+
+@dataclass
+class BundleIndex:
+    """The passive registry's advertisement for one image: which (from,
+    to) bundles exist, at what byte cost, plus the head tag the
+    publisher most recently completed. Plain signed JSON a dumb HTTP /
+    object store serves as a file — the whole point is that followers
+    plan their pull from this document alone, with zero negotiation
+    round-trips against anything smart."""
+
+    image: str
+    head: str
+    generation: int = 0          # bumped per publish; detects staleness
+    entries: List[BundleEntry] = field(default_factory=list)
+
+    def entry(self, from_tag: str, to_tag: str) -> Optional[BundleEntry]:
+        for e in self.entries:
+            if e.from_tag == from_tag and e.to_tag == to_tag:
+                return e
+        return None
+
+
+def _index_body(index: BundleIndex) -> dict:
+    return {"version": INDEX_VERSION, "image": index.image,
+            "head": index.head, "generation": int(index.generation),
+            "entries": [e.to_json() for e in index.entries]}
+
+
+def _index_sig(body: dict, key: bytes) -> str:
+    return hmac.new(key, dumps(body).encode(), hashlib.sha256).hexdigest()
+
+
+def encode_index(index: BundleIndex, key: bytes = b"") -> bytes:
+    """Serialize + sign a bundle index. The signature is HMAC-SHA256
+    over the canonical body JSON: with a shared ``key`` it proves
+    authenticity, with the default empty key it is still a keyed-hash
+    integrity check that catches truncation and bit-rot (a reader with
+    any key rejects a tampered body either way)."""
+    body = _index_body(index)
+    return dumps({"body": body, "sig": _index_sig(body, key)}).encode()
+
+
+def decode_index(data: bytes, key: bytes = b"") -> BundleIndex:
+    """Parse + verify a signed bundle index; ``DeltaFormatError`` on any
+    structural or signature failure — an unusable index, never a wrong
+    plan."""
+    try:
+        doc = json.loads(data)
+        body, sig = doc["body"], doc["sig"]
+    except (ValueError, TypeError, KeyError) as exc:
+        raise DeltaFormatError(f"malformed bundle index: {exc}") from exc
+    if not hmac.compare_digest(_index_sig(body, key), str(sig)):
+        raise DeltaFormatError("bundle index signature mismatch")
+    if body.get("version") != INDEX_VERSION:
+        raise DeltaFormatError(
+            f"unsupported index version {body.get('version')!r}")
+    try:
+        return BundleIndex(
+            image=str(body["image"]), head=str(body["head"]),
+            generation=int(body["generation"]),
+            entries=[BundleEntry.from_json(d) for d in body["entries"]])
+    except (ValueError, TypeError, KeyError) as exc:
+        raise DeltaFormatError(f"malformed bundle index body: {exc}") from exc
+
+
+def plan_bundle_chain(index: BundleIndex, held_tags: Iterable[str],
+                      head: Optional[str] = None,
+                      skip: Iterable[Tuple[str, str]] = ()
+                      ) -> Optional[List[BundleEntry]]:
+    """Cheapest chain of published bundles carrying a store that holds
+    ``held_tags`` to ``head`` (default: the index head), by ADVERTISED
+    byte cost — Dijkstra over the index's (from, to) edges, where every
+    held tag (and the empty tag, reaching full bundles) is a zero-cost
+    source. A single squashed bundle, a k-hop chain and a full pull all
+    compete on equal footing; ties break deterministically toward fewer
+    hops, then entry order.
+
+    ``skip`` removes (from, to) edges already found unusable (fetch
+    failed, hash mismatch, pruned on the far side) so a caller can
+    replan mid-pull without them. Tags in the index that the follower
+    pruned locally simply never become sources; entries whose bundles
+    vanished remotely surface as fetch failures and come back through
+    ``skip`` — either way the planner skips unusable chains instead of
+    raising. Returns ``[]`` when ``head`` is already held, None when no
+    chain reaches it."""
+    import heapq
+
+    head = head if head is not None else index.head
+    held: Set[str] = set(held_tags)
+    if head in held:
+        return []
+    skipped = set(skip)
+    edges: Dict[str, List[Tuple[int, BundleEntry]]] = {}
+    for order, e in enumerate(index.entries):
+        if (e.from_tag, e.to_tag) in skipped:
+            continue
+        edges.setdefault(e.from_tag, []).append((order, e))
+    # dist: tag -> (bytes, hops); prev: tag -> (entry, source_tag)
+    dist: Dict[str, Tuple[int, int]] = {}
+    prev: Dict[str, Tuple[BundleEntry, str]] = {}
+    heap: List[Tuple[int, int, int, str]] = []
+    for order, src in enumerate(sorted(held) + [""]):
+        dist[src] = (0, 0)
+        heapq.heappush(heap, (0, 0, order, src))
+    seq = len(dist)
+    while heap:
+        cost, hops, _, tag = heapq.heappop(heap)
+        if (cost, hops) > dist.get(tag, (cost, hops)):
+            continue            # stale heap entry
+        if tag == head:
+            chain: List[BundleEntry] = []
+            while tag in prev:
+                entry, tag = prev[tag]
+                chain.append(entry)
+            chain.reverse()
+            return chain
+        for order, e in edges.get(tag, ()):
+            cand = (cost + max(int(e.size), 0), hops + 1)
+            if cand < dist.get(e.to_tag, (float("inf"), 0)):
+                dist[e.to_tag] = cand
+                prev[e.to_tag] = (e, tag)
+                seq += 1
+                heapq.heappush(heap, (*cand, seq, e.to_tag))
+    return None

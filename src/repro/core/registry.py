@@ -74,13 +74,15 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from ..ft.faults import fault_point
+from ..ft.faults import CrashInjected, fault_point
 from ..ft.retry import RetryHealth, RetryPolicy
 from .chunker import hash_pool, sha256_hex
-from .delta import DeltaBundle, decode_delta, encode_delta
+from .delta import (BundleEntry, BundleIndex, DeltaBundle, DeltaFormatError,
+                    compose_delta_records, decode_delta, decode_index,
+                    encode_delta, encode_index)
 from .diff import diff_manifests
 from .manifest import (ImageConfig, LayerDescriptor, Manifest, chain_checksum,
-                       content_checksum, dumps, new_uuid)
+                       content_checksum, dumps, history_delta_chain, new_uuid)
 from .store import LayerStore
 
 
@@ -1409,6 +1411,325 @@ def import_delta(dst, data: bytes) -> PushStats:
             receiver.receive_layer(layer)
         stats = receiver.commit(bundle.manifest, bundle.config)
     return stats
+
+
+# -------------------------------------------------------------- squashing
+#: squash_deltas holds both endpoint tags against retention while it reads
+SQUASH_LEASE_TTL_S = 600.0
+
+
+def squash_deltas(store: LayerStore, name: str, from_tag: str,
+                  to_tag: str) -> DeltaBundle:
+    """Merge the per-commit delta records between ``from_tag`` and
+    ``to_tag`` into ONE static bundle — the OSTree static-delta move: a
+    lagging edge pays one merged delta instead of k per-commit hops or
+    the full-pull fall-through.
+
+    The composition reads the delta records ``inject_image_multi``
+    already writes into the config history (``history_delta_chain``) and
+    chains the layer-identity maps end-to-end
+    (``compose_delta_records``): a layer injected once and re-keyed k-1
+    times squashes to one re-key-verified clone; a layer rewritten at
+    every hop ships once, with its final bytes. The chunk payload is
+    derived from the STORE (final carried layers' chunks minus
+    everything reachable at ``from_tag``), never from the capped
+    per-record chunk lists — so intermediate rewrites of the same chunk
+    collapse to the final bytes by construction, and a truncated
+    history record can't truncate the bundle. When the history chain is
+    unrecoverable (``from_tag`` fell off the 64-entry cap, a full
+    rebuild sits in the span) or a composed re-key disagrees with the
+    config locks, it falls back to a store-level re-diff
+    (``diff_manifests``) — same bundle, derived the expensive way.
+
+    Both endpoint tags are leased for the duration so a concurrent
+    ``prune_steps``/``gc`` can't sweep them mid-read. The result applies
+    through the ordinary ``import_delta`` path and is bit-identity
+    checkable with ``verify_squashed_bundle``."""
+    owner = f"squash/{new_uuid()}"
+    store.acquire_lease(name, from_tag, owner, SQUASH_LEASE_TTL_S)
+    store.acquire_lease(name, to_tag, owner, SQUASH_LEASE_TTL_S)
+    try:
+        to_manifest, to_config = store.read_image(name, to_tag)
+        from_manifest, from_config = store.read_image(name, from_tag)
+        chain = history_delta_chain(to_config, name, from_tag)
+        rekey: Dict[str, str] = {}
+        carried: List[str] = []
+        if chain is not None:
+            origin = compose_delta_records(chain)
+            from_ids = set(from_manifest.layer_ids)
+            for lid in to_manifest.layer_ids:
+                base_lid, changed = origin.get(lid, (lid, False))
+                if lid not in origin:
+                    if lid not in from_ids:
+                        chain = None    # unexplained new layer: re-diff
+                        break
+                    continue            # untouched, id shared verbatim
+                if changed or base_lid not in from_ids:
+                    carried.append(lid)
+                elif from_config.layer_checksums.get(base_lid) != \
+                        to_config.layer_checksums.get(lid):
+                    chain = None        # history contradicts the locks
+                    break
+                else:
+                    rekey[lid] = base_lid
+        if chain is None:
+            base_layers = [store.read_layer(lid)
+                           for lid in from_manifest.layer_ids]
+            new_layers = [store.read_layer(lid)
+                          for lid in to_manifest.layer_ids]
+            missing, rekey, chunks = diff_manifests(base_layers, new_layers)
+        else:
+            # the bundle ships every layer whose ID the base lacks — a
+            # re-keyed clone's descriptor still crosses (fresh id + chain
+            # checksums), it just carries no chunk payload
+            changed = set(carried)
+            missing = [store.read_layer(lid) for lid in to_manifest.layer_ids
+                       if lid in changed or lid in rekey]
+            base_chunks: Set[str] = set()
+            for lid in from_manifest.layer_ids:
+                for rec in store.read_layer(lid).records:
+                    base_chunks.update(rec.chunks)
+            chunks = {h for layer in missing if layer.layer_id in changed
+                      for rec in layer.records
+                      for h in rec.chunks} - base_chunks
+        return DeltaBundle(
+            name=name, tag=to_tag, base_tag=from_tag,
+            manifest=to_manifest, config=to_config, layers=missing,
+            rekey=dict(rekey),
+            blobs={h: store.read_blob(h) for h in sorted(chunks)})
+    finally:
+        store.release_lease(name, owner)
+
+
+def verify_squashed_bundle(src: LayerStore, bundle: DeltaBundle) -> List[str]:
+    """Bit-identity proof for a squashed bundle: seed a scratch store
+    with a full export of the bundle's base tag, apply the bundle
+    through the normal ``import_delta`` path, then ``verify_image(
+    deep=True)`` AND byte-compare every reachable chunk against ``src``.
+    Returns the problem list (empty = proven identical)."""
+    import shutil
+    import tempfile
+
+    tmp = tempfile.mkdtemp(prefix="squash-verify-")
+    try:
+        scratch = LayerStore(tmp, chunk_bytes=src.chunk_bytes)
+        if bundle.base_tag:
+            import_delta(scratch, export_delta(src, bundle.name,
+                                               bundle.base_tag))
+        import_delta(scratch, encode_delta(bundle))
+        problems = scratch.verify_image(bundle.name, bundle.tag, deep=True)
+        manifest, _ = src.read_image(bundle.name, bundle.tag)
+        if manifest.layer_ids != scratch.read_image(
+                bundle.name, bundle.tag)[0].layer_ids:
+            problems.append("manifest layer order diverged")
+        for lid in manifest.layer_ids:
+            for rec in src.read_layer(lid).records:
+                for h in rec.chunks:
+                    if scratch.read_blob(h) != src.read_blob(h):
+                        problems.append(f"chunk {h[:12]} bytes diverged")
+        return problems
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+class PassiveRegistry:
+    """Static bundles + a signed index, published as plain files any dumb
+    HTTP / object store can serve — no smart endpoint, no per-follower
+    state, ZERO negotiation round-trips on the pull path.
+
+    Layout under ``root`` (a directory, or a read-only ``http(s)://``
+    base URL)::
+
+        <root>/<image>/index.json                       signed BundleIndex
+        <root>/<image>/bundles/<from>__<to>.rdb         encoded DeltaBundle
+        <root>/<image>/bundles/full__<to>.rdb           full bundle
+
+    Publishing writes bundle files FIRST and renames the index into
+    place LAST, so a crash mid-publish leaves a stale-but-consistent
+    index: readers either see the old advertisement or the complete new
+    one, never a reference to a half-written bundle. Fetches verify the
+    advertised size + sha256 before decoding (and ``decode_delta``
+    re-verifies every payload) — a truncated or bit-rotted bundle is
+    detected at the edge and merely skipped by the chain planner.
+
+    Fault points (ft/faults.py): ``bundle.publish`` fires on every file
+    the publisher writes, ``bundle.fetch`` on every file a reader pulls
+    (keys ``<root>:<image>:<from>-><to>`` and ``<root>:<image>:index``)."""
+
+    INDEX_NAME = "index.json"
+
+    def __init__(self, root: str, key: bytes = b""):
+        self.root = str(root)
+        self.key = key
+        self._http = self.root.startswith(("http://", "https://"))
+
+    # ------------------------------------------------------------ layout
+    def _join(self, *parts: str) -> str:
+        if self._http:
+            return "/".join([self.root.rstrip("/"), *parts])
+        return os.path.join(self.root, *parts)
+
+    @staticmethod
+    def bundle_relpath(from_tag: str, to_tag: str) -> str:
+        return f"bundles/{from_tag or 'full'}__{to_tag}.rdb"
+
+    # ------------------------------------------------------------ reading
+    def _read(self, *parts: str) -> bytes:
+        if self._http:
+            import urllib.request
+            with urllib.request.urlopen(self._join(*parts)) as resp:
+                return resp.read()
+        with open(self._join(*parts), "rb") as f:
+            return f.read()
+
+    def read_index(self, name: str) -> BundleIndex:
+        """Fetch + signature-verify the image's index. Raises OSError /
+        ``DeltaFormatError`` — callers treat either as "no usable
+        index", never as a fatal poll error."""
+        raw = fault_point("bundle.fetch", key=f"{self.root}:{name}:index",
+                          data=self._read(name, self.INDEX_NAME))
+        return decode_index(raw, key=self.key)
+
+    def fetch_bundle(self, name: str, entry: BundleEntry) -> bytes:
+        """Fetch one advertised bundle and verify it against the index's
+        size + content address BEFORE handing it to ``decode_delta`` —
+        truncation, bit-rot and a publish that crashed mid-write all
+        surface here as ``DeltaFormatError``."""
+        key = f"{self.root}:{name}:{entry.from_tag or 'full'}->{entry.to_tag}"
+        raw = fault_point("bundle.fetch", key=key,
+                          data=self._read(name, *entry.path.split("/")))
+        if len(raw) != entry.size or sha256_hex(raw) != entry.sha256:
+            raise DeltaFormatError(
+                f"bundle {entry.path} does not match its advertisement")
+        return raw
+
+    # --------------------------------------------------------- publishing
+    def _write(self, relparts: Sequence[str], data: bytes) -> None:
+        if self._http:
+            raise ValueError("http registry roots are read-only")
+        path = os.path.join(self.root, *relparts)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)       # readers see old bytes or new, never torn
+
+    def publish_bundle(self, store: LayerStore, name: str, to_tag: str,
+                       from_tag: str = "") -> BundleEntry:
+        """Encode + write one bundle file (squashed when ``from_tag`` is
+        given, full otherwise) and return its index entry. The entry
+        advertises the hash of the INTENDED bytes, computed before the
+        ``bundle.publish`` fault point — a corrupted write lands on disk
+        but can never pass a reader's verification."""
+        if from_tag:
+            data = encode_delta(squash_deltas(store, name, from_tag, to_tag))
+        else:
+            data = export_delta(store, name, to_tag)
+        entry = BundleEntry(from_tag=from_tag, to_tag=to_tag,
+                            path=self.bundle_relpath(from_tag, to_tag),
+                            size=len(data), sha256=sha256_hex(data))
+        key = f"{self.root}:{name}:{from_tag or 'full'}->{to_tag}"
+        self._write([name, *entry.path.split("/")],
+                    fault_point("bundle.publish", key=key, data=data))
+        return entry
+
+    def publish_image(self, store: LayerStore, name: str, head_tag: str,
+                      from_tags: Sequence[str] = (), full: bool = True
+                      ) -> BundleIndex:
+        """Publish ``head_tag`` as a full bundle plus one squashed bundle
+        per ``from_tags`` entry, then atomically advance the signed
+        index. Existing entries whose endpoint tags are still committed
+        in ``store`` are carried forward (the per-commit chain stays
+        advertised); entries referencing pruned tags or missing files
+        are dropped — the retention-awareness half of the contract. A
+        single bundle that fails to publish (a fault, a mid-squash
+        prune) is skipped and simply not advertised; the index written
+        at the end only ever names bundles that landed."""
+        prior = []
+        generation = 0
+        try:
+            old = decode_index(self._read(name, self.INDEX_NAME),
+                               key=self.key)
+            generation = old.generation
+            prior = old.entries
+        except (OSError, ValueError):
+            pass
+        entries: List[BundleEntry] = []
+        for e in prior:
+            if (e.from_tag, e.to_tag) == ("", head_tag) or \
+                    (e.from_tag and e.from_tag in from_tags and
+                     e.to_tag == head_tag):
+                continue            # about to be republished
+            if e.from_tag and not store.has_image(name, e.from_tag):
+                continue            # base pruned at the source
+            if not store.has_image(name, e.to_tag):
+                continue            # target pruned at the source
+            if not self._http and not os.path.exists(
+                    self._join(name, *e.path.split("/"))):
+                continue            # bundle file vanished
+            entries.append(e)
+        wanted = [(f, head_tag) for f in from_tags if f]
+        if full:
+            wanted.append(("", head_tag))
+        for from_tag, to_tag in wanted:
+            try:
+                entries.append(self.publish_bundle(store, name, to_tag,
+                                                   from_tag=from_tag))
+            except CrashInjected:
+                raise               # simulated publisher death
+            except (ConnectionError, OSError, ValueError, KeyError):
+                continue            # not advertised; index stays honest
+        index = BundleIndex(image=name, head=head_tag,
+                            generation=generation + 1, entries=entries)
+        try:
+            data = fault_point("bundle.publish",
+                               key=f"{self.root}:{name}:index",
+                               data=encode_index(index, key=self.key))
+            self._write([name, self.INDEX_NAME], data)
+        except CrashInjected:
+            raise               # simulated publisher death
+        except (ConnectionError, OSError):
+            pass                # stale-but-consistent: readers keep the
+                                # old advertisement; the next publish
+                                # (or a restarted one) advances it
+        return index
+
+    def prune(self, store: LayerStore, name: str) -> int:
+        """Drop index entries (and their bundle files) whose endpoint
+        tags are no longer committed in ``store`` — the publisher-side
+        retention sweep. Returns the number of entries dropped; safe to
+        call from a ``LayerStore`` gc hook (see ``attach_gc``)."""
+        try:
+            index = decode_index(self._read(name, self.INDEX_NAME),
+                                 key=self.key)
+        except (OSError, ValueError):
+            return 0
+        keep, dropped = [], []
+        for e in index.entries:
+            alive = store.has_image(name, e.to_tag) and \
+                (not e.from_tag or store.has_image(name, e.from_tag))
+            (keep if alive else dropped).append(e)
+        if not dropped:
+            return 0
+        index.entries = keep
+        index.generation += 1
+        if index.head and not store.has_image(name, index.head):
+            index.head = max((e.to_tag for e in keep), default="")
+        self._write([name, self.INDEX_NAME],
+                    encode_index(index, key=self.key))
+        for e in dropped:
+            try:
+                os.remove(self._join(name, *e.path.split("/")))
+            except OSError:
+                pass
+        return len(dropped)
+
+    def attach_gc(self, store: LayerStore, name: str) -> None:
+        """Register the retention sweep as a ``store.gc()`` hook: every
+        garbage collection also drops published bundles whose endpoint
+        tags it swept (reported as ``bundles_pruned`` in the gc stats)."""
+        store.add_gc_hook(
+            lambda st: {"bundles_pruned": self.prune(st, name)})
 
 
 # ---------------------------------------------------------------- repair

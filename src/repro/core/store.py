@@ -239,6 +239,10 @@ class LayerStore:
         # at the next commit instead of trusting bare existence.
         self._durable_paths: set = set()
         self._dirty_lock = threading.Lock()
+        # gc() callbacks for state that references committed tags but lives
+        # OUTSIDE the marked namespace (e.g. a PassiveRegistry's published
+        # bundles) — each returns {stat: count} merged into the gc stats.
+        self._gc_hooks: "list" = []
         # Layer descriptors are immutable once written (every revision gets
         # a fresh layer_id), so parsed descriptors are cached: the
         # incremental save path re-reads every layer of the parent image on
@@ -1227,6 +1231,14 @@ class LayerStore:
         return rep
 
     # ------------------------------------------------------------------- GC
+    def add_gc_hook(self, hook) -> None:
+        """Register ``hook(store) -> {stat: count}`` to run at the end of
+        every ``gc()`` — retention awareness for satellites that
+        advertise committed tags (``PassiveRegistry.attach_gc`` prunes
+        published bundles whose endpoint tags were swept). A hook that
+        raises is skipped, never fails the sweep."""
+        self._gc_hooks.append(hook)
+
     def gc(self) -> Dict[str, int]:
         """Mark-and-sweep of unreferenced blobs, layer descriptors and
         config blobs, across the WHOLE image namespace: the roots are
@@ -1332,6 +1344,13 @@ class LayerStore:
                 except OSError:
                     continue
                 stats["configs_swept"] += 1
+        for hook in list(self._gc_hooks):
+            try:
+                extra = hook(self) or {}
+            except Exception:
+                continue        # a broken hook must never break the sweep
+            for k, v in extra.items():
+                stats[k] = stats.get(k, 0) + int(v)
         return stats
 
     # ------------------------------------------- explicit decompose (export)

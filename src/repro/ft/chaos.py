@@ -1,7 +1,7 @@
 """Chaos harness: the seeded fault matrix CI soaks nightly.
 
 Every cell of ``(drop | corrupt | delay | crash | bitrot) x (push | fanout
-| relay | follower)`` runs one end-to-end replication under seeded faults
+| relay | follower | bundle)`` runs one end-to-end replication under seeded faults
 and asserts the topology converges **automatically** — no manual retry
 call — to bit-identical committed replicas at every tier with zero torn
 stores (``verify_image(deep=True)`` clean everywhere). The first four
@@ -34,11 +34,32 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
-from .faults import FaultSpec, inject, inject_bitrot
+from .faults import CrashInjected, FaultSpec, inject, inject_bitrot
 from .retry import RetryPolicy
 
 MODES = ("drop", "corrupt", "delay", "crash", "bitrot")
-SCENARIOS = ("push", "fanout", "relay", "follower")
+SCENARIOS = ("push", "fanout", "relay", "follower", "bundle")
+
+#: the nightly soak's seed range — CI shards it across a job matrix with
+#: the ``I::S`` stride shorthand (see ``parse_seeds``)
+SOAK_SEEDS = 16
+
+
+def parse_seeds(spec: str):
+    """Seed-spec grammar shared by the chaos and scrub CLIs: ``'N'`` (one
+    seed), ``'A:B'`` (a range), ``'A:B:S'`` (a strided range), and the CI
+    shard shorthand ``'I::S'`` — shard I of stride S over the nightly
+    ``[0, SOAK_SEEDS)`` soak range, so 4 matrix jobs running ``0::4``
+    .. ``3::4`` cover exactly the full range with no overlap."""
+    if ":" not in spec:
+        return [int(spec)]
+    parts = spec.split(":")
+    if len(parts) not in (2, 3):
+        raise ValueError(f"bad seed spec {spec!r}")
+    lo = int(parts[0]) if parts[0] else 0
+    hi = int(parts[1]) if parts[1] else SOAK_SEEDS
+    stride = int(parts[2]) if len(parts) == 3 and parts[2] else 1
+    return range(lo, hi, stride)
 
 # fast-converging policy: chaos cells only need *bounded* waits, the
 # backoff-shape guarantees are hypothesis-proved in test_retry_property
@@ -277,8 +298,97 @@ def _run_follower(base_dir: str, mode: str, seed: int) -> tuple:
     return inj.fired(), health.retries_spent
 
 
+def _run_bundle(base_dir: str, mode: str, seed: int) -> tuple:
+    """The passive-registry chain under fire: the publisher writes bundles
+    + a signed index through ``bundle.publish`` faults (torn bundle file,
+    stale index, corrupt index), the follower plans and pulls through
+    ``bundle.fetch`` faults (truncated/corrupt bundle, index/bundle hash
+    mismatch, unreachable files). The contract: a corrupted advertisement
+    is DETECTED at the edge (index signature, bundle sha) and the
+    follower falls back — another published chain, or the smart remote
+    pull — converging bit-identically; a crashed publisher leaves a
+    stale-but-consistent index its restart converges."""
+    from ..core import Instruction, PassiveRegistry, inject_payload_update
+    from ..serve.engine import CheckpointFollower
+    remote, local = _stores(base_dir, "remote", "local")
+    reg = PassiveRegistry(str(Path(base_dir) / "registry"))
+    rng = np.random.default_rng(3000 + seed)
+    state = {"params/w": rng.standard_normal(1000).astype(np.float32),
+             "opt/m": rng.standard_normal(500).astype(np.float32),
+             "opt/__step__": np.asarray([1], np.int32)}
+    ins = [Instruction("FROM", "arch", "config"),
+           Instruction("COPY", "state", "content")]
+    remote.build_image("ckpt", "step-00000001", ins,
+                       {"state": lambda: state})
+    policy = RetryPolicy(seed=seed, **_POLICY_KW)
+    follower = CheckpointFollower(remote, local, keep=5, retry=policy,
+                                  registry=reg)
+    assert follower.poll().step == 1              # warm base, no faults
+    prev_state = state
+    for step in (2, 3):
+        prev_state = {k: v.copy() for k, v in prev_state.items()}
+        prev_state["params/w"][7] = float(step)
+        prev_state["opt/__step__"][0] = step
+        inject_payload_update(remote, "ckpt", f"step-{step - 1:08d}",
+                              f"step-{step:08d}", {"state": prev_state})
+    # a clean prior advertisement, so a faulted republish tests the
+    # stale-index path (readers see THIS index until the new one lands)
+    reg.publish_image(remote, "ckpt", "step-00000002",
+                      from_tags=["step-00000001"])
+
+    def publish_head():
+        reg.publish_image(remote, "ckpt", "step-00000003",
+                          from_tags=["step-00000001", "step-00000002"])
+
+    if mode == "bitrot":
+        publish_head()
+        # at-rest rot in a published bundle file: the index still
+        # advertises the clean hash, so the fetch MUST reject the bytes
+        path = Path(reg.root) / "ckpt" / "bundles" / \
+            "step-00000001__step-00000003.rdb"
+        rotten = bytearray(path.read_bytes())
+        rotten[len(rotten) // 2] ^= 0xFF
+        path.write_bytes(bytes(rotten))
+        fired = 1
+        upd = follower.poll()
+    else:
+        specs = [FaultSpec(point="bundle.publish", mode=mode,
+                           match=reg.root),
+                 FaultSpec(point="bundle.fetch", mode=mode,
+                           match=reg.root)]
+        with inject(seed, *specs) as inj:
+            # crash fires once PER FILE (spec counters are per key), so a
+            # publisher that dies at bundle k restarts and dies at bundle
+            # k+1 — bounded by the number of files, then it converges
+            for _ in range(6):
+                try:
+                    publish_head()
+                    break
+                except CrashInjected:
+                    continue        # the restarted publisher re-publishes
+            upd = None
+            for _ in range(6):
+                try:
+                    upd = follower.poll()
+                except CrashInjected:
+                    continue        # the restarted follower re-polls
+                if upd is not None and upd.step == 3:
+                    break
+        fired = inj.fired()
+    assert upd is not None and upd.step == 3, \
+        "follower failed to reach head through the faulted registry"
+    _assert_converged(remote, [local], "ckpt", "step-00000003")
+    if mode == "bitrot":
+        plan = follower.last_plan
+        assert plan is not None and \
+            (plan.edges_skipped >= 1 or plan.fallback == "remote"), \
+            "rotten bundle was neither skipped nor fallen back from"
+    return fired, follower.health().retries_spent
+
+
 _RUNNERS = {"push": _run_push, "fanout": _run_fanout,
-            "relay": _run_relay, "follower": _run_follower}
+            "relay": _run_relay, "follower": _run_follower,
+            "bundle": _run_bundle}
 
 
 # ---------------------------------------------------------------- harness
@@ -333,16 +443,17 @@ def run_matrix(seeds: Iterable[int], modes: Iterable[str] = MODES,
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seeds", default="0:4",
-                    help="'N' for one seed or 'A:B' for a range")
+                    help="'N', 'A:B', 'A:B:S', or the CI shard "
+                         "shorthand 'I::S' (shard I of stride S over "
+                         f"[0, {SOAK_SEEDS}))")
     ap.add_argument("--modes", default=",".join(MODES))
     ap.add_argument("--scenarios", default=",".join(SCENARIOS))
+    ap.add_argument("--repro-out", default=None, metavar="PATH",
+                    help="write failed cells' repro lines here (CI "
+                         "uploads the file as a per-shard artifact)")
     args = ap.parse_args(argv)
-    if ":" in args.seeds:
-        lo, hi = args.seeds.split(":")
-        seeds: Iterable[int] = range(int(lo), int(hi))
-    else:
-        seeds = [int(args.seeds)]
-    cells = run_matrix(seeds, modes=args.modes.split(","),
+    cells = run_matrix(parse_seeds(args.seeds),
+                       modes=args.modes.split(","),
                        scenarios=args.scenarios.split(","))
     bad = [c for c in cells if not c.ok]
     for c in cells:
@@ -352,6 +463,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     for c in bad:
         print(f"\nFAILED {c.scenario}/{c.mode} seed={c.seed}:\n{c.error}",
               file=sys.stderr)
+    if args.repro_out and bad:
+        with open(args.repro_out, "w") as f:
+            for c in bad:
+                f.write(c.repro + "\n")
+        print(f"repro lines written to {args.repro_out}", file=sys.stderr)
     print(f"\n{len(cells) - len(bad)}/{len(cells)} cells converged")
     return 1 if bad else 0
 

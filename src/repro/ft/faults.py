@@ -28,6 +28,13 @@ Fault points currently wired (point / key):
     wire.commit           <dst.root>                 (death pre-rename)
     relay.fan             <relay.root>               (relay dies at re-fan)
     follower.pull         <local.root>               (hung/failed poll)
+    bundle.publish        <registry root>:<image>:<from>-><to>  and
+                          <registry root>:<image>:index
+                          (passive-registry write: torn/corrupt bundle
+                          file, stale or corrupt index)
+    bundle.fetch          same keys as bundle.publish
+                          (passive-registry read: truncated bundle,
+                          unreachable index)
 
 ``FaultInjected`` subclasses ``ConnectionError`` so a dropped wire op looks
 exactly like a flaky network to the caller; ``CrashInjected`` simulates

@@ -42,7 +42,7 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Iterable, List, Optional
 
 #: blob payloads shard under ``blobs/sha256/<h[:2]>/`` — 256 buckets; the
 #: scrub cursor is the index of the next un-scrubbed shard of this pass.
@@ -209,7 +209,8 @@ def _build_soak_store(base_dir: str, tenants: int = 3):
     return src, remote
 
 
-def _soak(slice_bytes: Optional[int]) -> int:
+def _soak(slice_bytes: Optional[int],
+          seeds: Optional[Iterable[int]] = None) -> int:
     import shutil
     import tempfile
 
@@ -238,18 +239,21 @@ def _soak(slice_bytes: Optional[int]) -> int:
             if not (sliced.complete and sliced.clean):
                 failures += 1
         # detector self-proof: seeded at-rest flips must be found, all of
-        # them, on a scratch copy of the remote
-        victim_root = os.path.join(base, "victim")
-        shutil.copytree(remote.root, victim_root)
-        victim = LayerStore(victim_root, chunk_bytes=4096)
-        flips = inject_bitrot(victim_root, seed=11, count=3)
-        rep = victim.scrub()
-        detected = set(rep.corrupt_blob_hashes)
-        want = {h for h, _ in flips}
-        print(f"bitrot self-proof: injected {len(want)}, "
-              f"detected {len(detected & want)}")
-        if detected & want != want:
-            failures += 1
+        # them, on a scratch copy of the remote — one round per seed (CI
+        # shards the seed range exactly like the chaos soak)
+        for seed in (seeds if seeds is not None else [11]):
+            victim_root = os.path.join(base, f"victim-{seed}")
+            shutil.copytree(remote.root, victim_root)
+            victim = LayerStore(victim_root, chunk_bytes=4096)
+            flips = inject_bitrot(victim_root, seed=seed, count=3)
+            rep = victim.scrub()
+            detected = set(rep.corrupt_blob_hashes)
+            want = {h for h, _ in flips}
+            print(f"bitrot self-proof (seed {seed}): injected {len(want)}, "
+                  f"detected {len(detected & want)}")
+            if detected & want != want:
+                failures += 1
+            shutil.rmtree(victim_root, ignore_errors=True)
         if failures:
             print(f"FAIL: {failures} scrub-soak failures")
             return 1
@@ -271,12 +275,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "failing on any finding")
     ap.add_argument("--slice-bytes", type=int, default=None,
                     help="re-hash budget per slice (default: one pass)")
+    ap.add_argument("--seeds", default=None,
+                    help="bitrot self-proof seeds for --soak: 'N', "
+                         "'A:B', 'A:B:S', or the CI shard shorthand "
+                         "'I::S' (see ft.chaos.parse_seeds)")
     ap.add_argument("--reset", action="store_true",
                     help="discard the persisted cursor first")
     args = ap.parse_args(argv)
 
     if args.soak:
-        return _soak(args.slice_bytes)
+        from .chaos import parse_seeds
+        return _soak(args.slice_bytes,
+                     seeds=None if args.seeds is None
+                     else parse_seeds(args.seeds))
     if not args.root:
         ap.error("--root or --soak required")
     from ..core import LayerStore

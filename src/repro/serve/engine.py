@@ -43,9 +43,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (LayerStore, PushRejected, PushStats, RelayNode,
-                    diff_tensor_records, repair_image, replicate_fanout,
-                    sha256_hex)
+from ..core import (DeltaFormatError, LayerStore, PassiveRegistry,
+                    PushRejected, PushStats, RelayNode, diff_tensor_records,
+                    import_delta, plan_bundle_chain, repair_image,
+                    replicate_fanout, sha256_hex)
 from ..ft.faults import fault_point
 from ..ft.retry import RetryPolicy
 from ..models import decode_step, init_cache, prefill
@@ -120,6 +121,21 @@ class FollowerHealth:
     corrupt_polls: int = 0          # polls whose revision failed re-hash
     repairs: int = 0                # in-line repair_image heals attempted
     last_verify_error: Optional[str] = None   # why the last gate refused
+
+
+@dataclass
+class PassivePullStats:
+    """Accounting for one passive (bundle-registry) pull: which chain the
+    planner chose and what it actually cost. ``negotiations`` stays 0 on
+    the passive path BY CONSTRUCTION — the plan comes entirely from the
+    published index — and the bench counter-proves it."""
+
+    hops: int = 0                   # bundle edges applied
+    bytes_pulled: int = 0           # encoded bundle bytes fetched
+    planned_bytes: int = 0          # the chain's ADVERTISED byte cost
+    negotiations: int = 0           # have-set rounds (passive path: zero)
+    edges_skipped: int = 0          # unusable edges dropped mid-pull
+    fallback: str = ""              # "" | "remote" (smart pull took over)
 
 
 @dataclass
@@ -352,9 +368,23 @@ class CheckpointFollower:
                  sparse: bool = True, children: Sequence = (),
                  source: str = "inflight",
                  retry: Optional[RetryPolicy] = None,
-                 verify: bool = True):
-        self.remote = remote if isinstance(remote, LayerStore) \
-            else LayerStore(str(remote))
+                 verify: bool = True,
+                 registry=None):
+        if remote is None and registry is None:
+            raise ValueError("follower needs a remote store, a passive "
+                             "registry, or both")
+        self.remote = None if remote is None else (
+            remote if isinstance(remote, LayerStore)
+            else LayerStore(str(remote)))
+        # passive bundle registry (a PassiveRegistry, or a directory path /
+        # http(s) URL): polls plan the cheapest published chain from its
+        # signed index — zero negotiation round-trips — and only fall back
+        # to the smart ``remote`` pull when no advertised chain works.
+        # remote=None makes the follower FULLY passive: it can serve from a
+        # dumb file/object store with no training-side endpoint at all.
+        self.registry = registry if registry is None or \
+            isinstance(registry, PassiveRegistry) \
+            else PassiveRegistry(str(registry))
         self.local = local if isinstance(local, LayerStore) \
             else LayerStore(str(local))
         self.relay = RelayNode(self.local, children=children,
@@ -367,6 +397,7 @@ class CheckpointFollower:
         self.verify = verify          # re-hash every revision pre-swap
         self.last_step: Optional[int] = None
         self.last_pull: Optional[PushStats] = None
+        self.last_plan: Optional[PassivePullStats] = None
         self.last_update: Optional[SparseUpdate] = None
         self.last_fan = None          # child-tier FanoutStats (relay mode)
         self._polls = 0
@@ -419,6 +450,64 @@ class CheckpointFollower:
                 raise
             return None
 
+    def _read_index(self):
+        """The registry's signed index, or None when it is missing,
+        unreachable, truncated or fails its signature — an unusable
+        advertisement is a reason to fall back, never a poll error."""
+        if self.registry is None:
+            return None
+        try:
+            return self.registry.read_index(self.image)
+        except (OSError, ConnectionError, ValueError):
+            return None
+
+    def _pull_passive(self, index, tag: str) -> Optional[PushStats]:
+        """Reach ``tag`` by applying published bundles along the cheapest
+        advertised chain — zero negotiation round-trips (the plan comes
+        entirely from the index; ``import_delta`` on a plain store never
+        calls ``negotiate``). Every hop is verified against the index's
+        size + sha256 and re-verified content-addressed on receipt; an
+        edge that fails ANY of that — fetch error, hash mismatch, a
+        bundle whose endpoint tags the publisher or this store pruned —
+        is skipped and the chain replanned without it, never raised.
+        Returns None when no advertised chain can reach ``tag`` (the
+        caller falls back to the smart remote pull, when there is one)."""
+        plan_stats = PassivePullStats()
+        self.last_plan = plan_stats
+        held = set(self.local.list_tags(self.image, fresh=True))
+        skip: Set = set()
+        agg: Optional[PushStats] = None
+        while True:
+            plan = plan_bundle_chain(index, held, head=tag, skip=skip)
+            if plan is None:
+                return None
+            if not plan:
+                break
+            entry = plan[0]
+            try:
+                data = self.registry.fetch_bundle(self.image, entry)
+                stats = import_delta(self.relay or self.local, data)
+            except (ConnectionError, OSError, PushRejected, ValueError,
+                    KeyError):
+                skip.add((entry.from_tag, entry.to_tag))
+                plan_stats.edges_skipped += 1
+                continue
+            plan_stats.hops += 1
+            plan_stats.bytes_pulled += len(data)
+            plan_stats.planned_bytes += entry.size
+            held.add(entry.to_tag)
+            if agg is None:
+                agg = stats
+            else:
+                for f in ("blobs_sent", "blobs_dedup", "layers_sent",
+                          "layers_dedup", "bytes_sent", "bytes_payload",
+                          "bytes_meta", "bytes_deduped",
+                          "layers_deep_verified", "layers_rekey_verified",
+                          "blobs_hashed_remote"):
+                    setattr(agg, f, getattr(agg, f) + getattr(stats, f))
+                agg.wall_s += stats.wall_s
+        return agg if agg is not None else PushStats()
+
     def poll(self) -> Optional[SparseUpdate]:
         """Health-instrumented wrapper over the sync step: failures are
         COUNTED (consecutive run + last error) before re-raising, so a
@@ -441,16 +530,33 @@ class CheckpointFollower:
         # lazy import: ckpt depends on core only, but keep serve->ckpt
         # out of module import time. The shared helpers guarantee the
         # replica and the trainer agree on tag format + retention.
-        from ..ckpt.manager import latest_step, prune_steps, unflatten_tree
-        # fresh: the trainer commits tags from another process/instance,
-        # so the remote store's commit-point cache can't see them
-        step = latest_step(self.remote, self.image, fresh=True)
-        if step is None or step == self.last_step:
+        from ..ckpt.manager import (latest_step, prune_steps, step_of_tag,
+                                    unflatten_tree)
+        # head discovery: the signed bundle index (passive) and/or the
+        # remote's tag listing (smart). A stale index can trail the
+        # trainer, so with both available the newer head wins; fresh=True
+        # on the remote because the trainer commits tags from another
+        # process/instance, invisible to its commit-point cache.
+        index = self._read_index()
+        passive_step = None if index is None else step_of_tag(index.head)
+        remote_step = None if self.remote is None else \
+            latest_step(self.remote, self.image, fresh=True)
+        step = max((s for s in (passive_step, remote_step) if s is not None),
+                   default=None)
+        if step is None or \
+                (self.last_step is not None and step <= self.last_step):
             return None
         tag = f"step-{step:08d}"
-        pulled = self._pull(tag)
-        if pulled is None:           # tag pruned mid-pull: retry next poll
-            return None
+        pulled = None
+        if index is not None and passive_step == step:
+            pulled = self._pull_passive(index, tag)
+            if pulled is None and self.last_plan is not None and \
+                    self.remote is not None:
+                self.last_plan.fallback = "remote"
+        if pulled is None and self.remote is not None:
+            pulled = self._pull(tag)
+        if pulled is None:           # tag pruned mid-pull / no usable
+            return None              # chain: retry next poll
         self.last_pull = pulled
         # sparse plan BEFORE retention prunes the previous tag away
         changed: Optional[Set[str]] = None
@@ -538,7 +644,13 @@ class CheckpointFollower:
         """One in-line anti-entropy heal of a corrupt pulled revision from
         the followed remote (core.registry.repair_image: quarantine the
         bad blobs, pull only the damaged bytes, deep-verify). True = the
-        revision is clean again and the poll may proceed."""
+        revision is clean again and the poll may proceed. A fully passive
+        follower (no remote) has no live peer to heal from — it refuses
+        the revision and keeps serving last-known-good."""
+        if self.remote is None:
+            self.last_verify_error = \
+                f"repair of {tag} skipped: no remote peer"
+            return False
         try:
             rep = repair_image(self.local, self.image, tag,
                                peers=[self.remote])

@@ -414,6 +414,32 @@ def test_chaos_cell_relay(tmp_path, mode):
     assert cell.ok and cell.fired >= 1
 
 
+@pytest.mark.parametrize("mode",
+                         ["drop", "corrupt", "delay", "crash", "bitrot"])
+def test_chaos_cell_bundle(tmp_path, mode):
+    """The passive-registry cells: faulted publishes leave a stale-but-
+    consistent index, faulted/rotten fetches are skipped and replanned
+    (or fall back to the smart remote) — every mode converges the
+    follower bit-identically to the published head."""
+    cell = run_cell("bundle", mode, seed=2, base_dir=str(tmp_path))
+    assert cell.ok and cell.fired >= 1
+
+
+def test_parse_seeds_shard_shorthand():
+    """The CI matrix slices one seed range with 'I::S' strides: the 4
+    shards must partition [0, SOAK_SEEDS) exactly — no seed lost, none
+    soaked twice."""
+    from repro.ft.chaos import SOAK_SEEDS, parse_seeds
+    assert list(parse_seeds("4")) == [4]                # one seed
+    assert list(parse_seeds("2:5")) == [2, 3, 4]
+    assert list(parse_seeds("1:9:3")) == [1, 4, 7]
+    shards = [list(parse_seeds(f"{i}::4")) for i in range(4)]
+    assert shards[1][:2] == [1, 5]
+    flat = [s for shard in shards for s in shard]
+    assert sorted(flat) == list(range(SOAK_SEEDS))
+    assert len(flat) == len(set(flat)) == SOAK_SEEDS
+
+
 def test_chaos_cell_failure_prints_repro(tmp_path):
     from repro.ft import chaos as chaos_mod
 

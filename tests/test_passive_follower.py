@@ -1,0 +1,227 @@
+"""Passive pulls end-to-end: a CheckpointManager that publishes static
+bundles after every save, and a CheckpointFollower that converges from
+those plain files alone — zero negotiation round-trips, cheapest
+advertised chain, and never a raised poll when the index goes stale,
+a bundle rots, or a referenced tag was pruned."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, CheckpointPolicy
+from repro.core import PassiveRegistry, plan_bundle_chain
+from repro.core.registry import DeltaReceiver
+from repro.serve import CheckpointFollower
+
+
+def tag(s):
+    return f"step-{s:08d}"
+
+
+def make_publisher(tmp_path, rng, steps, **policy_kw):
+    """A trainer that saves ``steps`` checkpoints, publishing into a
+    passive registry after every save (spans 1/4/8 back)."""
+    reg = PassiveRegistry(str(tmp_path / "registry"))
+    mgr = CheckpointManager(
+        str(tmp_path / "train"), "t",
+        CheckpointPolicy(async_write=False, chunk_bytes=512, keep=0,
+                         **policy_kw),
+        registry=reg)
+    params = {"w": rng.standard_normal(600).astype(np.float32),
+              "b": rng.standard_normal(64).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    for step in range(steps):
+        if step:
+            params = dict(params, w=params["w"].copy())
+            params["w"][:64] = rng.standard_normal(64)  # same hot chunk
+        mgr.save(step, params, opt)
+        assert mgr.last_publish_error is None
+    return mgr, reg, params
+
+
+def no_negotiate(monkeypatch):
+    """Counter-proof: the passive path must never open a negotiation —
+    make any attempt a hard failure."""
+    monkeypatch.setattr(
+        DeltaReceiver, "negotiate",
+        lambda self, *a, **k: (_ for _ in ()).throw(
+            AssertionError("negotiate() called on the passive path")))
+
+
+def test_manager_publishes_spans_after_save(tmp_path, rng):
+    mgr, reg, _ = make_publisher(tmp_path, rng, steps=9)
+    index = reg.read_index(mgr.image)
+    assert index.head == tag(8)
+    assert mgr.last_publish is not None
+    pairs = {(e.from_tag, e.to_tag) for e in index.entries}
+    # spans 1, 4, 8 back from the head, plus the full bundle
+    assert {(tag(7), tag(8)), (tag(4), tag(8)), (tag(0), tag(8)),
+            ("", tag(8))} <= pairs
+
+
+def test_publish_failure_never_fails_the_save(tmp_path, rng,
+                                              monkeypatch):
+    mgr, reg, params = make_publisher(tmp_path, rng, steps=2)
+    monkeypatch.setattr(PassiveRegistry, "publish_image",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("registry volume offline")))
+    params = dict(params, w=params["w"] + 1.0)
+    mgr.save(2, params, {"m": np.zeros(8, np.float32)})    # must not raise
+    assert mgr.last_publish_error is not None
+    assert "offline" in mgr.last_publish_error
+    assert mgr.store.has_image(mgr.image, tag(2))          # save landed
+
+
+def test_passive_only_follower_zero_negotiation(tmp_path, rng,
+                                                monkeypatch):
+    """No smart remote AT ALL (remote=None): the follower bootstraps from
+    the full bundle and then rides squashed bundles — plain file reads,
+    counter-proved zero negotiation rounds."""
+    no_negotiate(monkeypatch)
+    mgr, reg, params = make_publisher(tmp_path, rng, steps=9)
+    fol = CheckpointFollower(None, str(tmp_path / "serve"),
+                             image=mgr.image, keep=12, registry=reg)
+    upd = fol.poll()
+    assert upd is not None and upd.step == 8 and upd.full
+    assert np.array_equal(np.asarray(upd.params["w"]), params["w"])
+    plan = fol.last_plan
+    assert plan.negotiations == 0 and plan.fallback == ""
+    assert plan.hops == 1                    # the full bundle, one edge
+    assert fol.local.verify_image(mgr.image, tag(8), deep=True) == []
+    assert fol.poll() is None                # up to date, still no raise
+
+
+def test_lagging_follower_takes_one_squashed_hop(tmp_path, rng,
+                                                 monkeypatch):
+    """8 commits behind: the planner picks the single squashed bundle
+    over the per-commit chain and the full pull, and the pull costs
+    exactly the advertised bytes."""
+    no_negotiate(monkeypatch)
+    reg = PassiveRegistry(str(tmp_path / "registry"))
+    mgr = CheckpointManager(
+        str(tmp_path / "train"), "t",
+        CheckpointPolicy(async_write=False, chunk_bytes=512, keep=0),
+        registry=reg)
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr.save(0, params, opt)
+    fol = CheckpointFollower(None, str(tmp_path / "serve"),
+                             image=mgr.image, keep=12, registry=reg)
+    assert fol.poll().step == 0              # warm at the old head
+    for step in range(1, 9):
+        params = dict(params, w=params["w"].copy())
+        params["w"][:64] = rng.standard_normal(64)
+        mgr.save(step, params, opt)
+    index = reg.read_index(mgr.image)
+    cheapest = sum(e.size for e in plan_bundle_chain(index, [tag(0)]))
+    upd = fol.poll()
+    assert upd is not None and upd.step == 8
+    plan = fol.last_plan
+    assert plan.hops == 1 and plan.negotiations == 0
+    assert plan.bytes_pulled == plan.planned_bytes == cheapest
+    full = index.entry("", tag(8))
+    assert plan.bytes_pulled < full.size     # beat the full pull
+    assert np.array_equal(np.asarray(upd.params["w"]), params["w"])
+    assert fol.local.verify_image(mgr.image, tag(8), deep=True) == []
+
+
+def test_poll_survives_index_referencing_pruned_bundle(tmp_path, rng,
+                                                       monkeypatch):
+    """The regression this PR fixes: a stale index may advertise a chain
+    whose bundle the publisher's retention already swept. The planner
+    must skip the dead edge and replan mid-poll — never raise."""
+    no_negotiate(monkeypatch)
+    mgr, reg, params = make_publisher(tmp_path, rng, steps=1)
+    fol = CheckpointFollower(None, str(tmp_path / "serve"),
+                             image=mgr.image, keep=12, registry=reg)
+    assert fol.poll().step == 0
+    opt = {"m": np.zeros(8, np.float32)}
+    for step in range(1, 9):
+        params = dict(params, w=params["w"].copy())
+        params["w"][:64] = rng.standard_normal(64)
+        mgr.save(step, params, opt)
+    # sweep the exact bundle the plan would take, WITHOUT republishing
+    index = reg.read_index(mgr.image)
+    doomed = plan_bundle_chain(index, [tag(0)])[0]
+    os.remove(os.path.join(reg.root, mgr.image, *doomed.path.split("/")))
+    upd = fol.poll()                         # must not raise
+    assert upd is not None and upd.step == 8
+    assert fol.last_plan.edges_skipped >= 1
+    assert fol.local.verify_image(mgr.image, tag(8), deep=True) == []
+
+
+def test_rotten_bundle_skipped_and_replanned(tmp_path, rng, monkeypatch):
+    no_negotiate(monkeypatch)
+    mgr, reg, params = make_publisher(tmp_path, rng, steps=1)
+    fol = CheckpointFollower(None, str(tmp_path / "serve"),
+                             image=mgr.image, keep=12, registry=reg)
+    assert fol.poll().step == 0
+    opt = {"m": np.zeros(8, np.float32)}
+    for step in range(1, 5):
+        params = dict(params, w=params["w"].copy())
+        params["w"][:64] = rng.standard_normal(64)
+        mgr.save(step, params, opt)
+    index = reg.read_index(mgr.image)
+    victim = plan_bundle_chain(index, [tag(0)])[0]
+    path = os.path.join(reg.root, mgr.image, *victim.path.split("/"))
+    rotten = bytearray(open(path, "rb").read())
+    rotten[len(rotten) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(rotten))
+    upd = fol.poll()                         # hash mismatch -> replan
+    assert upd is not None and upd.step == 4
+    assert fol.last_plan.edges_skipped >= 1
+    assert np.array_equal(np.asarray(upd.params["w"]), params["w"])
+
+
+def test_no_usable_chain_falls_back_to_smart_remote(tmp_path, rng):
+    mgr, reg, params = make_publisher(tmp_path, rng, steps=3)
+    # every advertised bundle vanishes; the index itself stays up
+    bundles = os.path.join(reg.root, mgr.image, "bundles")
+    for f in os.listdir(bundles):
+        os.remove(os.path.join(bundles, f))
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"),
+                             image=mgr.image, keep=12, registry=reg)
+    upd = fol.poll()
+    assert upd is not None and upd.step == 2
+    assert fol.last_plan is not None
+    assert fol.last_plan.fallback == "remote"
+    assert np.array_equal(np.asarray(upd.params["w"]), params["w"])
+
+
+def test_passive_only_no_chain_returns_none(tmp_path, rng):
+    """Passive-only follower with nothing fetchable: poll reports
+    "nothing applied" (None) — a quiet retry-next-poll, not a failure."""
+    mgr, reg, _ = make_publisher(tmp_path, rng, steps=2)
+    bundles = os.path.join(reg.root, mgr.image, "bundles")
+    for f in os.listdir(bundles):
+        os.remove(os.path.join(bundles, f))
+    fol = CheckpointFollower(None, str(tmp_path / "serve"),
+                             image=mgr.image, registry=reg)
+    assert fol.poll() is None
+    assert fol.health().consecutive_failures == 0
+    assert fol.last_step is None
+
+
+def test_stale_index_newer_remote_head_wins(tmp_path, rng):
+    """The index trails the trainer (publish crashed, volume lagged): a
+    follower with BOTH channels must chase the remote's newer head, not
+    the stale advertisement."""
+    mgr, reg, params = make_publisher(tmp_path, rng, steps=2)
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr.registry = None                      # publishing stops here
+    for step in (2, 3):
+        params = dict(params, w=params["w"].copy())
+        params["w"][:64] = rng.standard_normal(64)
+        mgr.save(step, params, opt)
+    assert reg.read_index(mgr.image).head == tag(1)     # stale
+    fol = CheckpointFollower(mgr.store, str(tmp_path / "serve"),
+                             image=mgr.image, keep=12, registry=reg)
+    upd = fol.poll()
+    assert upd is not None and upd.step == 3
+    assert np.array_equal(np.asarray(upd.params["w"]), params["w"])
+
+
+def test_follower_requires_some_channel(tmp_path):
+    with pytest.raises(ValueError):
+        CheckpointFollower(None, str(tmp_path / "serve"))

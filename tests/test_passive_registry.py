@@ -1,0 +1,192 @@
+"""Passive bundle registry: signed index + static bundle files any dumb
+file/object server can host — publish atomicity (stale-but-consistent
+index), advertisement verification at the fetch edge, retention-aware
+carry-forward, and the gc-hooked prune sweep."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BundleEntry, BundleIndex, DeltaFormatError,
+                        Instruction, LayerStore, PassiveRegistry,
+                        decode_index, encode_index, import_delta,
+                        inject_payload_update, plan_bundle_chain)
+from repro.ft import FaultSpec, inject
+from repro.ft.faults import CrashInjected
+
+INS = [Instruction("FROM", "arch", "config"),
+       Instruction("COPY", "state", "content")]
+
+
+def tag(s):
+    return f"step-{s:08d}"
+
+
+def build_steps(tmp_path, rng, steps):
+    store = LayerStore(str(tmp_path / "src"), chunk_bytes=512)
+    state = {"w": rng.standard_normal(2048).astype(np.float32)}
+    store.build_image("ckpt", tag(1), INS, {"state": lambda: state})
+    for s in range(2, steps + 1):
+        state = {"w": state["w"].copy()}
+        state["w"][:128] = rng.standard_normal(128)
+        inject_payload_update(store, "ckpt", tag(s - 1), tag(s),
+                              {"state": state})
+    return store
+
+
+# -------------------------------------------------------------- the index
+def test_index_roundtrip_signature_and_tamper():
+    index = BundleIndex(image="ckpt", head=tag(3), generation=7, entries=[
+        BundleEntry("", tag(3), "bundles/full__x.rdb", 100, "ab" * 32),
+        BundleEntry(tag(1), tag(3), "bundles/a__b.rdb", 40, "cd" * 32)])
+    data = encode_index(index, key=b"secret")
+    back = decode_index(data, key=b"secret")
+    assert back == index
+    with pytest.raises(DeltaFormatError):
+        decode_index(data, key=b"wrong-key")
+    with pytest.raises(DeltaFormatError):
+        decode_index(data[:-2], key=b"secret")          # truncated
+    flipped = bytearray(data)
+    flipped[len(data) // 2] ^= 0xFF
+    with pytest.raises(DeltaFormatError):
+        decode_index(bytes(flipped), key=b"secret")
+    with pytest.raises(DeltaFormatError):
+        decode_index(b"not json at all")
+
+
+# ---------------------------------------------------------------- planner
+def test_plan_picks_cheapest_by_advertised_bytes():
+    def e(f, t, size):
+        return BundleEntry(f, t, f"bundles/{f or 'full'}__{t}.rdb",
+                           size, "00" * 32)
+    index = BundleIndex(image="ckpt", head="c", entries=[
+        e("", "c", 500), e("a", "c", 100), e("a", "b", 30), e("b", "c", 30)])
+    chain = plan_bundle_chain(index, ["a"])
+    assert [(x.from_tag, x.to_tag) for x in chain] == [("a", "b"),
+                                                      ("b", "c")]
+    # make the direct hop cheaper -> it wins; skip it -> back to the chain
+    index.entry("a", "c").size = 50
+    assert [(x.from_tag, x.to_tag) for x in plan_bundle_chain(
+        index, ["a"])] == [("a", "c")]
+    assert [(x.from_tag, x.to_tag) for x in plan_bundle_chain(
+        index, ["a"], skip=[("a", "c")])] == [("a", "b"), ("b", "c")]
+    # ties break toward fewer hops
+    index.entry("a", "c").size = 60
+    assert [(x.from_tag, x.to_tag) for x in plan_bundle_chain(
+        index, ["a"])] == [("a", "c")]
+    # nothing held: only the full bundle reaches the head
+    assert [(x.from_tag, x.to_tag) for x in plan_bundle_chain(
+        index, [])] == [("", "c")]
+    assert plan_bundle_chain(index, ["c"]) == []        # already there
+    assert plan_bundle_chain(index, [], skip=[("", "c")],
+                             head="b") is None          # unreachable
+
+
+# ------------------------------------------------------ publish and fetch
+def test_publish_image_layout_fetch_and_apply(tmp_path, rng):
+    store = build_steps(tmp_path, rng, 3)
+    reg = PassiveRegistry(str(tmp_path / "reg"), key=b"k")
+    index = reg.publish_image(store, "ckpt", tag(3), from_tags=[tag(1)])
+    assert index.head == tag(3) and index.generation == 1
+    assert os.path.exists(os.path.join(reg.root, "ckpt", "index.json"))
+    assert os.path.exists(os.path.join(
+        reg.root, "ckpt", "bundles", f"{tag(1)}__{tag(3)}.rdb"))
+    # a fresh reader round-trips the signed index and applies the full
+    # bundle into an empty store
+    reread = reg.read_index("ckpt")
+    assert reread == index
+    full = reread.entry("", tag(3))
+    assert full is not None and full.size > 0
+    fresh = LayerStore(str(tmp_path / "edge"), chunk_bytes=512)
+    import_delta(fresh, reg.fetch_bundle("ckpt", full))
+    assert fresh.verify_image("ckpt", tag(3), deep=True) == []
+
+
+def test_fetch_rejects_truncation_and_bitrot(tmp_path, rng):
+    store = build_steps(tmp_path, rng, 2)
+    reg = PassiveRegistry(str(tmp_path / "reg"))
+    index = reg.publish_image(store, "ckpt", tag(2), from_tags=[tag(1)])
+    entry = index.entry(tag(1), tag(2))
+    path = os.path.join(reg.root, "ckpt", *entry.path.split("/"))
+    good = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(good[:-3])                              # truncated
+    with pytest.raises(DeltaFormatError):
+        reg.fetch_bundle("ckpt", entry)
+    rotten = bytearray(good)
+    rotten[len(good) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(rotten))                          # at-rest flip
+    with pytest.raises(DeltaFormatError):
+        reg.fetch_bundle("ckpt", entry)
+
+
+def test_publish_carries_forward_chain_and_drops_pruned(tmp_path, rng):
+    store = build_steps(tmp_path, rng, 4)
+    reg = PassiveRegistry(str(tmp_path / "reg"))
+    for s in range(2, 5):                               # trainer cadence
+        reg.publish_image(store, "ckpt", tag(s), from_tags=[tag(s - 1)])
+    index = reg.read_index("ckpt")
+    pairs = {(e.from_tag, e.to_tag) for e in index.entries}
+    # the whole per-commit chain stays advertised across publishes
+    assert {(tag(s - 1), tag(s)) for s in range(2, 5)} <= pairs
+    assert ("", tag(4)) in pairs
+    # prune step-2 at the source: the NEXT publish drops every entry
+    # touching it, keeps the rest
+    assert store.remove_image("ckpt", tag(2))
+    index = reg.publish_image(store, "ckpt", tag(4), from_tags=[tag(3)])
+    pairs = {(e.from_tag, e.to_tag) for e in index.entries}
+    assert not any(tag(2) in p for p in pairs)
+    assert (tag(3), tag(4)) in pairs and ("", tag(4)) in pairs
+
+
+def test_prune_runs_as_gc_hook(tmp_path, rng):
+    store = build_steps(tmp_path, rng, 3)
+    reg = PassiveRegistry(str(tmp_path / "reg"))
+    for s in range(2, 4):
+        reg.publish_image(store, "ckpt", tag(s), from_tags=[tag(s - 1)])
+    reg.attach_gc(store, "ckpt")
+    dead = os.path.join(reg.root, "ckpt", "bundles",
+                        f"{tag(1)}__{tag(2)}.rdb")
+    assert os.path.exists(dead)
+    assert store.remove_image("ckpt", tag(1))
+    stats = store.gc()
+    assert stats["bundles_pruned"] >= 1
+    assert not os.path.exists(dead)                     # file swept too
+    pairs = {(e.from_tag, e.to_tag) for e in reg.read_index("ckpt").entries}
+    assert not any(tag(1) in p for p in pairs)
+
+
+def test_crashed_index_write_leaves_stale_consistent_index(tmp_path, rng):
+    """Death between the bundle writes and the index rename: readers keep
+    the old advertisement (every entry still fetchable) and the restarted
+    publisher advances it."""
+    store = build_steps(tmp_path, rng, 3)
+    reg = PassiveRegistry(str(tmp_path / "reg"))
+    old = reg.publish_image(store, "ckpt", tag(2), from_tags=[tag(1)])
+    with inject(0, FaultSpec(point="bundle.publish", mode="crash",
+                             match=":ckpt:index")):
+        with pytest.raises(CrashInjected):
+            reg.publish_image(store, "ckpt", tag(3), from_tags=[tag(2)])
+    stale = reg.read_index("ckpt")
+    assert stale == old                                 # old or new, never torn
+    for entry in stale.entries:
+        reg.fetch_bundle("ckpt", entry)                 # all still valid
+    fresh = reg.publish_image(store, "ckpt", tag(3), from_tags=[tag(2)])
+    assert reg.read_index("ckpt") == fresh
+    assert fresh.head == tag(3)
+
+
+def test_dropped_bundle_write_keeps_index_honest(tmp_path, rng):
+    """A bundle file that fails to publish is simply NOT advertised — the
+    index written afterwards only ever names bundles that landed."""
+    store = build_steps(tmp_path, rng, 2)
+    reg = PassiveRegistry(str(tmp_path / "reg"))
+    with inject(0, FaultSpec(point="bundle.publish", mode="drop",
+                             match=f"{tag(1)}->{tag(2)}")):
+        index = reg.publish_image(store, "ckpt", tag(2),
+                                  from_tags=[tag(1)])
+    assert index.entry(tag(1), tag(2)) is None
+    full = index.entry("", tag(2))
+    assert full is not None
+    reg.fetch_bundle("ckpt", full)                      # advertised => real

@@ -1,0 +1,183 @@
+"""Squashed static delta chains: the per-commit delta records the
+injection path already writes into the config history, composed into ONE
+bundle that replays bit-identically — repeated overwrites of the same
+chunk collapse to the final bytes, re-key-only spans ship no payload."""
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, compose_delta_records,
+                        encode_delta, history_delta_chain, import_delta,
+                        inject_payload_update, push, squash_deltas,
+                        verify_squashed_bundle)
+from repro.core import registry as registry_mod
+
+INS = [
+    Instruction("FROM", "arch", "config"),
+    Instruction("COPY", "state", "content"),
+    Instruction("COPY", "extra", "content"),
+    Instruction("CMD", "serve", "config"),
+]
+
+
+def tag(s):
+    return f"step-{s:08d}"
+
+
+def mk(tmp_path, name):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+def build_chain(store, rng, steps, touch_extra=()):
+    """step-1 .. step-<steps>; every hop rewrites the SAME head chunk of
+    'state' (the bytes a squash must collapse); hops in ``touch_extra``
+    also rewrite 'extra' (the bytes it must keep)."""
+    state = {"w": rng.standard_normal(2048).astype(np.float32)}
+    extra = {"e": rng.standard_normal(512).astype(np.float32)}
+    store.build_image("ckpt", tag(1), INS,
+                      {"state": lambda: state, "extra": lambda: extra})
+    for s in range(2, steps + 1):
+        state = {"w": state["w"].copy()}
+        state["w"][:128] = rng.standard_normal(128)     # same 512 B chunk
+        payload = {"state": state}
+        if s in touch_extra:
+            extra = {"e": extra["e"].copy()}
+            extra["e"][0] = float(s)
+            payload["extra"] = extra
+        inject_payload_update(store, "ckpt", tag(s - 1), tag(s), payload)
+    return state, extra
+
+
+# ------------------------------------------------------------ composition
+def test_compose_single_record_kinds():
+    rec = {"injected": {"b2": "b1"}, "rekeyed": {"c2": "c1"},
+           "rederived": {"d2": "d1"}}
+    origin = compose_delta_records([rec])
+    assert origin == {"b2": ("b1", True), "c2": ("c1", False),
+                      "d2": ("d1", True)}
+
+
+def test_compose_chains_identity_and_changed_flag():
+    # injected once then re-keyed twice: ONE content change vs the base;
+    # a layer only ever re-keyed composes to unchanged
+    records = [{"injected": {"b2": "b1"}, "rekeyed": {"c2": "c1"}},
+               {"rekeyed": {"b3": "b2", "c3": "c2"}},
+               {"rekeyed": {"b4": "b3"}, "rederived": {"c4": "c3"}}]
+    origin = compose_delta_records(records)
+    assert origin["b4"] == ("b1", True)
+    assert origin["c4"] == ("c1", True)      # rederived at the last hop
+    assert "b2" not in origin and "c2" not in origin   # intermediate ids
+
+
+def test_history_delta_chain_suffix_per_base(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=4)
+    _, config = store.read_image("ckpt", tag(4))
+    chain = history_delta_chain(config, "ckpt", tag(1))
+    assert chain is not None and len(chain) == 3
+    assert [c["base"][1] for c in chain] == [tag(1), tag(2), tag(3)]
+    assert len(history_delta_chain(config, "ckpt", tag(3))) == 1
+    assert history_delta_chain(config, "ckpt", "step-99999999") is None
+    assert history_delta_chain(config, "other-image", tag(1)) is None
+
+
+# ------------------------------------------------------------- squashing
+def test_squash_replays_bit_identically(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=5, touch_extra=(3,))
+    bundle = squash_deltas(store, "ckpt", tag(1), tag(5))
+    assert bundle.base_tag == tag(1) and bundle.tag == tag(5)
+    assert verify_squashed_bundle(store, bundle) == []
+
+
+def test_squash_collapses_same_chunk_overwrites(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=6)
+    per_hop_blobs = sum(
+        len(squash_deltas(store, "ckpt", tag(s - 1), tag(s)).blobs)
+        for s in range(2, 7))
+    squashed = squash_deltas(store, "ckpt", tag(1), tag(6))
+    # 5 hops each rewrote the same chunk: the squash ships it ONCE, with
+    # the final bytes — not once per hop
+    assert per_hop_blobs >= 5
+    assert len(squashed.blobs) < per_hop_blobs
+    assert verify_squashed_bundle(store, squashed) == []
+
+
+def test_squash_rekey_only_layers_ship_no_payload(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=4)         # 'extra' never touched
+    bundle = squash_deltas(store, "ckpt", tag(1), tag(4))
+    assert bundle.rekey                      # downstream layers re-keyed
+    # no blob in the bundle belongs to the untouched 'extra' layer
+    from_manifest, _ = store.read_image("ckpt", tag(1))
+    extra_chunks = {h for lid in from_manifest.layer_ids
+                    for rec in store.read_layer(lid).records
+                    for h in rec.chunks
+                    if store.read_layer(lid).instruction.arg == "extra"}
+    assert extra_chunks.isdisjoint(bundle.blobs)
+
+
+def test_squash_forced_fallback_matches_history_path(tmp_path, rng,
+                                                     monkeypatch):
+    """The diff_manifests fallback (history unrecoverable) must derive
+    the SAME bundle the composed-history path does."""
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=5, touch_extra=(2, 4))
+    fast = squash_deltas(store, "ckpt", tag(1), tag(5))
+    monkeypatch.setattr(registry_mod, "history_delta_chain",
+                        lambda *a, **k: None)
+    slow = squash_deltas(store, "ckpt", tag(1), tag(5))
+    assert fast.rekey == slow.rekey
+    assert fast.blobs == slow.blobs
+    assert [ly.layer_id for ly in fast.layers] == \
+        [ly.layer_id for ly in slow.layers]
+    assert verify_squashed_bundle(store, slow) == []
+
+
+def test_squash_applies_through_import_delta(tmp_path, rng):
+    store, follower = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    build_chain(store, rng, steps=4)
+    push(store, follower, "ckpt", tag(1))
+    data = encode_delta(squash_deltas(store, "ckpt", tag(1), tag(4)))
+    import_delta(follower, data)
+    assert follower.verify_image("ckpt", tag(4), deep=True) == []
+    m_src, _ = store.read_image("ckpt", tag(4))
+    m_dst, _ = follower.read_image("ckpt", tag(4))
+    assert m_src.layer_ids == m_dst.layer_ids
+    for lid in m_src.layer_ids:
+        for rec in store.read_layer(lid).records:
+            for h in rec.chunks:
+                assert follower.read_blob(h) == store.read_blob(h)
+
+
+def test_squash_releases_endpoint_leases(tmp_path, rng):
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=3)
+    squash_deltas(store, "ckpt", tag(1), tag(3))
+    assert not store.leased("ckpt", tag(1))
+    assert not store.leased("ckpt", tag(3))
+
+
+def test_squash_endpoints_survive_concurrent_prune(tmp_path, rng):
+    """The leases are load-bearing: mid-squash, a retention sweep must
+    refuse to collect either endpoint tag."""
+    from repro.ckpt.manager import prune_steps
+    store = mk(tmp_path, "src")
+    build_chain(store, rng, steps=4)
+
+    pruned_during = {}
+    orig = registry_mod.history_delta_chain
+
+    def raced(*a, **k):
+        # runs inside squash_deltas, after both leases are held
+        prune_steps(store, "ckpt", keep=1)
+        pruned_during["tags"] = set(store.list_tags("ckpt"))
+        return orig(*a, **k)
+
+    registry_mod.history_delta_chain = raced
+    try:
+        bundle = squash_deltas(store, "ckpt", tag(1), tag(4))
+    finally:
+        registry_mod.history_delta_chain = orig
+    assert {tag(1), tag(4)} <= pruned_during["tags"]
+    assert verify_squashed_bundle(store, bundle) == []
