@@ -17,6 +17,10 @@ Three classes of drift, all exact and dependency-free:
    range it paraphrases. When an intentional perf change moves a
    baseline outside the range (``--update-baseline``), this gate forces
    the prose to be updated in the same PR instead of drifting quietly.
+4. **Analyzer rule-table drift** — the "Protocol invariants" table in
+   docs/ARCHITECTURE.md must list exactly the rule ids registered in
+   ``repro.analysis.RULES``: adding a rule without documenting its
+   contract (or documenting a rule that no longer exists) fails CI.
 
 Runs in the lint job (no benchmark execution needed — it reads only the
 COMMITTED baselines and the docs).
@@ -168,11 +172,32 @@ def check_claims(problems: list) -> None:
             print(f"OK         {base_name}:{dotted} = {round(got, 3)}")
 
 
+def check_analyzer_rule_table(problems: list) -> None:
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    from repro.analysis import RULES
+    arch = os.path.join(REPO_ROOT, "docs", "ARCHITECTURE.md")
+    with open(arch) as f:
+        text = f.read()
+    # rule-table rows look like "| `R1` | contract... | bug... |"
+    documented = set(re.findall(r"^\|\s*`(R\d+)`\s*\|", text, re.M))
+    for rid in sorted(set(RULES) - documented):
+        problems.append(f"docs/ARCHITECTURE.md: analyzer rule {rid} "
+                        "is registered but missing from the Protocol "
+                        "invariants table")
+    for rid in sorted(documented - set(RULES)):
+        problems.append(f"docs/ARCHITECTURE.md: Protocol invariants "
+                        f"table documents {rid} but repro.analysis.RULES "
+                        "does not register it")
+    for rid in sorted(documented & set(RULES)):
+        print(f"OK         ARCHITECTURE.md rule table documents {rid}")
+
+
 def main() -> int:
     problems: list = []
     check_links(problems)
     check_bench_tables(problems)
     check_claims(problems)
+    check_analyzer_rule_table(problems)
     if problems:
         print("\nFAIL:")
         for p in problems:

@@ -56,6 +56,7 @@ from ..core import (BuildReport, Instruction, LayerStore, PassiveRegistry,
                     RelayNode, diff_image, fingerprint_tree,
                     fingerprint_tree_packed, inject_image_multi, push_delta,
                     replicate_fanout)
+from ..ft.faults import CrashInjected
 
 
 def flatten_tree(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -359,7 +360,10 @@ class CheckpointManager:
                 self.tag_of(step), diffs,
                 providers={k: (lambda p=v: p) for k, v in payloads.items()},
                 durability=self.policy.durability)
-        except Exception:
+        except CrashInjected:
+            raise           # simulated SIGKILL: the process is gone, it
+            # cannot fall back to a full rebuild "after" dying
+        except Exception:  # noqa: BLE001
             # structure changed ("compiled" case) -> rebuild fall-back
             report = self._save_full(step, payloads,
                                      fps=new_fps if new_fps else None)
@@ -399,7 +403,10 @@ class CheckpointManager:
                 self.store, self.image, self.tag_of(steps[-1]),
                 from_tags=froms)
             self.last_publish_error = None
-        except Exception as e:
+        except CrashInjected:
+            raise           # the saver process dying is not "a dead
+            # object store" — best-effort must not swallow the crash
+        except Exception as e:  # noqa: BLE001
             self.last_publish_error = f"{type(e).__name__}: {e}"
 
     # --------------------------------------------------------- replication

@@ -866,7 +866,7 @@ class RelayNode(DeltaReceiver):
                 if servable:
                     for h in child.probe_blobs(sorted(servable)):
                         self._local_want.setdefault(h, set()).add(i)
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001
                 self._fail_child(i, e)
         return have
 
@@ -882,7 +882,7 @@ class RelayNode(DeltaReceiver):
                 continue
             try:
                 lacks = child.probe_blobs(chunk_ids)
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001
                 self._fail_child(i, e)
                 continue
             for h in lacks:
@@ -909,7 +909,7 @@ class RelayNode(DeltaReceiver):
             for i in targets:
                 try:
                     self.children[i].receive_blob(h, data)
-                except Exception as e:
+                except Exception as e:  # noqa: BLE001
                     self._fail_child(i, e)
         return n
 
@@ -958,7 +958,7 @@ class RelayNode(DeltaReceiver):
             for i in targets:
                 try:
                     self.children[i].receive_blob(h, data)
-                except Exception as e:
+                except Exception as e:  # noqa: BLE001
                     self._fail_child(i, e)
 
         # image-wide totals for per-child dedup accounting (metadata only;
@@ -987,7 +987,7 @@ class RelayNode(DeltaReceiver):
                 # committed: this child needs no base revision anymore —
                 # release the whole cross-image lease set it pinned
                 self.store.release_lease(None, self._lease_owner(i))
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001
                 self._fail_child(i, e)
         if self.retry is not None:
             _retry_failed(self.store, self.children, self.fan,
@@ -1184,7 +1184,7 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
                                for h in rec.chunks})
                 missing_layers[i] = list(have.missing_layers)
                 plans[i] = recv.probe_blobs(need) if need else set()
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001
                 fail(i, e)
 
         if len(receivers) > 1 and pool is not None:
@@ -1217,7 +1217,7 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
                 return
             try:
                 receivers[i].receive_blob(h, data)
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001
                 fail(i, e)
 
         recv_futures: List[Future] = []
@@ -1226,7 +1226,16 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
             targets = [i for i in want[h] if alive(i)]
             if not targets:
                 return              # every taker died mid-transfer
-            data = src.read_blob(h)
+            try:
+                data = src.read_blob(h)
+            except OSError as e:
+                # a source-side read failure fails THIS blob's takers —
+                # not the whole fan: the retry pass re-reads and re-ships
+                # just the remainder. CrashInjected (the pusher process
+                # itself dying) is a RuntimeError and still propagates.
+                for i in targets:
+                    fail(i, e)
+                return
             with lock:
                 fan.source_blob_reads += 1
                 fan.blobs_broadcast += 1
@@ -1275,7 +1284,7 @@ def replicate_fanout(src: LayerStore, remotes: Sequence,
         def safe_finalize(i: int) -> None:
             try:
                 finalize(i)
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001
                 fail(i, e)
 
         live = [i for i in range(len(receivers)) if alive(i)]
@@ -1612,6 +1621,9 @@ class PassiveRegistry:
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(data)
+            f.flush()
+            os.fsync(f.fileno())    # bytes durable BEFORE the rename —
+            # a post-crash index must never advertise a torn bundle
         os.replace(tmp, path)       # readers see old bytes or new, never torn
 
     def publish_bundle(self, store: LayerStore, name: str, to_tag: str,

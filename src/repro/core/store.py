@@ -45,7 +45,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..ft.faults import fault_point
+from ..ft.faults import CrashInjected, fault_point
 from ..ft.scrub import (ScrubFinding, ScrubReport, clear_cursor,
                         load_cursor, save_cursor)
 from .chunker import (DEFAULT_CHUNK_BYTES, TensorRecord, assemble_tensor,
@@ -1347,7 +1347,10 @@ class LayerStore:
         for hook in list(self._gc_hooks):
             try:
                 extra = hook(self) or {}
-            except Exception:
+            except CrashInjected:
+                raise           # a simulated SIGKILL inside a hook is the
+                # sweeping process dying, not "a broken hook"
+            except Exception:  # noqa: BLE001
                 continue        # a broken hook must never break the sweep
             for k, v in extra.items():
                 stats[k] = stats.get(k, 0) + int(v)

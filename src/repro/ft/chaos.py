@@ -141,12 +141,36 @@ def _assert_converged(src, dsts, name: str, tag: str) -> None:
             f"replica {d.root} not bit-identical to source"
 
 
-def _spec(mode: str, match: str) -> FaultSpec:
-    # crash strikes the commit point (death just before the manifest
-    # rename); the other modes strike the blob transfer itself
-    if mode == "crash":
-        return FaultSpec(point="wire.commit", mode="crash", match=match)
-    return FaultSpec(point="wire.receive_blob", mode=mode, match=match)
+#: every in-flight protocol seam, with the side of the wire it strikes —
+#: cells rotate through this table seed by seed, so the nightly soak
+#: range ([0, 16)) hits each seam at least twice under every mode.  The
+#: analyzer's R1 rule (repro.analysis) gates that every fault point in
+#: src appears here or in a scenario's own specs: an uncovered point is
+#: a dead kill-matrix cell.
+SEAMS = (
+    ("wire.negotiate", "dst"),
+    ("wire.probe_blobs", "dst"),
+    ("wire.receive_layer", "dst"),
+    ("wire.receive_blob", "dst"),
+    ("wire.commit", "dst"),
+    ("store.read_blob", "src"),     # the SOURCE's disk read, mid-ship
+    ("store.commit", "dst"),        # death/drop inside write_image
+)
+
+
+def _spec(mode: str, seed: int, dst_root: str,
+          src_root: Optional[str] = None) -> FaultSpec:
+    """The seam this cell strikes, rotated by seed. Topologies without a
+    distinct source side (fan-out replicas share one source with the
+    healthy majority) fall back to the canonical transfer seam so the
+    fault stays scoped to the one sick replica."""
+    point, side = SEAMS[seed % len(SEAMS)]
+    if side == "src":
+        if src_root is None:
+            point = "wire.receive_blob"
+        else:
+            return FaultSpec(point=point, mode=mode, match=src_root)
+    return FaultSpec(point=point, mode=mode, match=dst_root)
 
 
 # ------------------------------------------------------- at-rest bitrot
@@ -176,8 +200,25 @@ def _rot_and_heal(victim, name: str, tag: str, peers, seed: int,
     want = {h for h, _ in flips}
     rep = victim.scrub()
     assert set(rep.corrupt_blob_hashes) == want,         f"scrub detected {rep.corrupt_blob_hashes} != injected {sorted(want)}"
-    rr = repair_image(victim, name, tag, peers=peers, scrub_report=rep)
-    assert rr.verified_clean, "repair did not deep-verify clean"
+    # the healing path itself runs under fire: a dropped peer pull and a
+    # simulated SIGKILL at the repair commit — a repair session must be
+    # restartable from a (now stale) scrub report, re-verifying instead
+    # of trusting it
+    repair_specs = [FaultSpec(point="repair.pull", mode="drop",
+                              match=victim.root, times=1),
+                    FaultSpec(point="repair.commit", mode="crash",
+                              match=victim.root, times=1)]
+    rr = None
+    with inject(seed, *repair_specs):
+        for _ in range(4):
+            try:
+                rr = repair_image(victim, name, tag, peers=peers,
+                                  scrub_report=rep)
+                break
+            except (ConnectionError, CrashInjected):
+                continue            # the restarted repair session re-plans
+    assert rr is not None and rr.verified_clean, \
+        "repair did not deep-verify clean"
     assert rr.wire_amplification <= 1.25,         f"repair over-pulled: {rr.wire_amplification:.2f}x"
     victim.purge_quarantine()
     assert victim.scrub().clean, "re-scrub after repair found debris"
@@ -198,8 +239,16 @@ def _run_push(base_dir: str, mode: str, seed: int) -> tuple:
         _assert_converged(src, [dst], "app", "v2")
         return fired, 0
     policy = RetryPolicy(seed=seed, **_POLICY_KW)
-    with inject(seed, _spec(mode, dst.root)) as inj:
-        push_delta(src, dst, "app", "v2", retry=policy)
+    with inject(seed, _spec(mode, seed, dst.root, src.root)) as inj:
+        # in-run retries converge drops/corruption; a CrashInjected that
+        # escapes is the PUSHER process dying (e.g. at its own disk read)
+        # — the restarted pusher re-pushes, per kill-matrix semantics
+        for _ in range(4):
+            try:
+                push_delta(src, dst, "app", "v2", retry=policy)
+                break
+            except CrashInjected:
+                continue
     _assert_converged(src, [dst], "app", "v2")
     return inj.fired(), 0
 
@@ -219,7 +268,7 @@ def _run_fanout(base_dir: str, mode: str, seed: int) -> tuple:
         fired = _rot_and_heal(r1, "app", "v2", [r0], seed)
         _assert_converged(src, [r0, r1, r2], "app", "v2")
         return fired, 0
-    with inject(seed, _spec(mode, r1.root)) as inj:   # one sick replica
+    with inject(seed, _spec(mode, seed, r1.root)) as inj:  # one sick replica
         fan = replicate_fanout(src, [r0, r1, r2], "app", "v2",
                                retry=policy)
     assert fan.majority_ok, "healthy majority failed to commit"
@@ -245,7 +294,12 @@ def _run_relay(base_dir: str, mode: str, seed: int) -> tuple:
         fired = _rot_and_heal(mid, "app", "v2", [e1], seed)
         _assert_converged(src, [mid, e0, e1], "app", "v2")
         return fired, 0
-    with inject(seed, _spec(mode, e0.root)) as inj:   # one sick edge
+    # the edge seam rotates; the relay's own fan point ALSO fires once —
+    # the mid tier must survive its fan being dropped/killed and converge
+    # through _retry_failed on the next fan attempt
+    with inject(seed, _spec(mode, seed, e0.root),
+                FaultSpec(point="relay.fan", mode=mode, match=mid.root,
+                          times=1)) as inj:           # one sick edge
         fan = replicate_fanout(src, [relay], "app", "v2", retry=policy)
     rep = fan.replicas[0]
     assert rep.ok, f"relay tier failed: {rep.error}"
@@ -283,12 +337,25 @@ def _run_follower(base_dir: str, mode: str, seed: int) -> tuple:
         # (receive verified the wire bytes, the disk write rotted them) —
         # the follower's verify gate must catch it pre-swap and heal
         # in-line from the remote, within the same poll
-        spec = FaultSpec(point="store.write_blob", mode="bitrot",
-                         match=local.root, times=1)
+        specs = [FaultSpec(point="store.write_blob", mode="bitrot",
+                           match=local.root, times=1)]
     else:
-        spec = _spec(mode, local.root)
-    with inject(seed, spec) as inj:
-        upd = follower.poll()
+        # the rotated seam plus the follower's own pull point: a poll
+        # that dies (drop propagates out of _pull; CrashInjected is the
+        # simulated SIGKILL) must be converged by the NEXT poll tick —
+        # exactly how a supervised follower process behaves
+        specs = [_spec(mode, seed, local.root, remote.root),
+                 FaultSpec(point="follower.pull", mode=mode,
+                           match=local.root, times=1)]
+    with inject(seed, *specs) as inj:
+        upd = None
+        for _ in range(6):
+            try:
+                upd = follower.poll()
+            except (ConnectionError, CrashInjected):
+                continue            # the restarted follower re-polls
+            if upd is not None and upd.step == 2:
+                break
     assert upd is not None and upd.step == 2, "follower failed to advance"
     _assert_converged(remote, [local], "ckpt", "step-00000002")
     health = follower.health()

@@ -27,7 +27,7 @@ Fault points currently wired (point / key):
     wire.receive_blob     <dst.root>:<blob hash>     (corrupt transfer)
     wire.commit           <dst.root>                 (death pre-rename)
     relay.fan             <relay.root>               (relay dies at re-fan)
-    follower.pull         <local.root>               (hung/failed poll)
+    follower.pull         <local.root>:<image>:<tag> (hung/failed poll)
     bundle.publish        <registry root>:<image>:<from>-><to>  and
                           <registry root>:<image>:index
                           (passive-registry write: torn/corrupt bundle

@@ -132,8 +132,11 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
         res.arg_bytes = float(ma.argument_size_in_bytes)
         res.temp_bytes = float(ma.temp_size_in_bytes)
         res.out_bytes = float(ma.output_size_in_bytes)
-    except Exception:
-        pass
+    except (AttributeError, NotImplementedError, RuntimeError,
+            TypeError, ValueError):
+        pass    # memory_analysis is best-effort: absent or unimplemented
+        # on some backends/jax versions; the roofline just loses the
+        # arg/temp/out byte split
     return res
 
 

@@ -47,7 +47,7 @@ from ..core import (DeltaFormatError, LayerStore, PassiveRegistry,
                     PushRejected, PushStats, RelayNode, diff_tensor_records,
                     import_delta, plan_bundle_chain, repair_image,
                     replicate_fanout, sha256_hex)
-from ..ft.faults import fault_point
+from ..ft.faults import CrashInjected, fault_point
 from ..ft.retry import RetryPolicy
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
@@ -434,7 +434,8 @@ class CheckpointFollower:
         tag is a real error and re-raises (after ``retry`` converged or
         quarantined, when one is configured)."""
         try:
-            fault_point("follower.pull", f"{self.local.root}:{tag}")
+            fault_point("follower.pull",
+                        f"{self.local.root}:{self.image}:{tag}")
             fan = replicate_fanout(self.remote,
                                    [self.relay or self.local],
                                    self.image, tag, retry=self.retry)
@@ -515,7 +516,7 @@ class CheckpointFollower:
         self._polls += 1
         try:
             upd = self._poll_inner()
-        except Exception as e:
+        except Exception as e:  # noqa: BLE001
             self._failures += 1
             self._consecutive_failures += 1
             self._last_error = f"{type(e).__name__}: {e}"
@@ -654,7 +655,10 @@ class CheckpointFollower:
         try:
             rep = repair_image(self.local, self.image, tag,
                                peers=[self.remote])
-        except Exception as e:
+        except CrashInjected:
+            raise           # the follower process dying mid-repair must
+            # surface from poll(), not read as "repair failed, refused"
+        except Exception as e:  # noqa: BLE001
             self.last_verify_error = \
                 f"repair of {tag} failed: {type(e).__name__}: {e}"
             return False
@@ -679,7 +683,7 @@ class CheckpointFollower:
             return None
         try:
             engine.refresh(upd.params, upd.changed_params, step=upd.step)
-        except Exception as e:
+        except Exception as e:  # noqa: BLE001
             engine.rollback()
             self.last_verify_error = \
                 f"refresh rolled back: {type(e).__name__}: {e}"

@@ -1,0 +1,8 @@
+"""Chaos matrix that lost a seam and kept a dead spec."""
+from ft.faults import FaultSpec
+
+SEAMS = ("wire.send",)
+
+
+def cell(seed: int) -> FaultSpec:
+    return FaultSpec(point="ghost.point", mode="drop")

@@ -1,0 +1,12 @@
+"""R1 violating fixture: ``wire.recv`` is injected in src but named by
+neither the chaos matrix nor any test, and the chaos module specs a
+``ghost.point`` that exists nowhere in src."""
+from ft.faults import fault_point
+
+
+def send(key: str) -> None:
+    fault_point("wire.send", key)
+
+
+def recv(key: str) -> None:
+    fault_point("wire.recv", key)

@@ -1,0 +1,2 @@
+def test_send_converges() -> None:
+    assert "wire.send"

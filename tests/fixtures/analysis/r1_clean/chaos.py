@@ -1,0 +1,7 @@
+from ft.faults import FaultSpec
+
+SEAMS = ("wire.send", "wire.recv")
+
+
+def cell(seed: int) -> FaultSpec:
+    return FaultSpec(point="wire.send", mode="drop")

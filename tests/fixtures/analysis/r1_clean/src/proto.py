@@ -1,0 +1,11 @@
+"""R1 clean twin: both points appear in the chaos matrix and in tests,
+and every spec targets a real point."""
+from ft.faults import fault_point
+
+
+def send(key: str) -> None:
+    fault_point("wire.send", key)
+
+
+def recv(key: str) -> None:
+    fault_point("wire.recv", key)

@@ -1,0 +1,2 @@
+def test_both_seams_converge() -> None:
+    assert "wire.send" and "wire.recv"

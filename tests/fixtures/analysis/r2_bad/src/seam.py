@@ -1,0 +1,11 @@
+"""R2 violating fixture: a broad except over a fault-point-reaching body
+that neither re-raises nor is CrashInjected-guarded — a simulated
+SIGKILL would be swallowed."""
+from ft.faults import fault_point
+
+
+def pull(key: str):
+    try:
+        return fault_point("seam.pull", key)
+    except Exception:
+        return None

@@ -1,0 +1,19 @@
+"""R2 clean twin: the same seam, crash-guarded; plus a re-raising
+bookkeeping handler (both compliant shapes)."""
+from ft.faults import CrashInjected, fault_point
+
+
+def pull(key: str):
+    try:
+        return fault_point("seam.pull", key)
+    except CrashInjected:
+        raise
+    except Exception:
+        return None
+
+
+def push(key: str):
+    try:
+        return fault_point("seam.push", key)
+    except Exception:
+        raise

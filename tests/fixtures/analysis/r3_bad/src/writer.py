@@ -1,0 +1,10 @@
+"""R3 violating fixture: commit-point rename with no durability scope —
+bytes can still be in the page cache when the new name appears."""
+import os
+
+
+def publish(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)

@@ -1,0 +1,11 @@
+"""R3 clean twin: fsync before the rename dominates the commit point."""
+import os
+
+
+def publish(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)

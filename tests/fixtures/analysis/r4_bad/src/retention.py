@@ -1,0 +1,6 @@
+"""R4 violating fixture: retention fires without consulting leases and
+without an explicit force= override."""
+
+
+def cleanup(store, image: str) -> None:
+    store.remove_image(image, "stale")

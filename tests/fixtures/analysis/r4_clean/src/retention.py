@@ -1,0 +1,11 @@
+"""R4 clean twin: lease-consulting and explicit-force retention."""
+
+
+def cleanup(store, image: str) -> None:
+    if store.lease_holders(image):
+        return
+    store.remove_image(image, "stale")
+
+
+def force_cleanup(store, image: str) -> None:
+    store.remove_image(image, "stale", force=True)

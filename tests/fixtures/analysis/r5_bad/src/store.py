@@ -1,0 +1,10 @@
+"""R5 violating fixture: a tag-cache invalidation that skips the
+holdings index, and a holdings write outside the lock."""
+
+
+class LayerStore:
+    def remove_tag(self, name: str, tag: str) -> None:
+        self._tags_cache.pop(name, None)
+
+    def note_holding(self, h: str, tag: str) -> None:
+        self._holdings_cache[h] = tag

@@ -1,0 +1,11 @@
+"""R5 clean twin: holdings updated with the tag state, under the lock."""
+
+
+class LayerStore:
+    def remove_tag(self, name: str, tag: str) -> None:
+        self._tags_cache.pop(name, None)
+        self._holdings_apply_remove(name, tag)
+
+    def note_holding(self, h: str, tag: str) -> None:
+        with self._holdings_lock:
+            self._holdings_cache[h] = tag

@@ -1,0 +1,141 @@
+"""Fixture-driven proof of each analyzer rule (R1-R5) plus the committed
+self-scan gate: every rule must flag its violating fixture tree, stay
+silent on the clean twin, and a full run over src/repro must diff clean
+against the committed ``analysis/baseline.json`` — the same invocation CI
+runs (``python -m repro.analysis --check``)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import RULES, AnalysisConfig, run_analysis
+from repro.analysis.baseline import diff, load_baseline
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: anchors (or anchor prefixes — R5's unlocked anchor embeds a line
+#: number) every violating fixture must produce, and nothing but these
+EXPECTED_ANCHORS = {
+    "R1": {"chaos-missing:wire.recv", "test-missing:wire.recv",
+           "dead-spec:ghost.point"},
+    "R2": {"swallow:pull"},
+    "R3": {"undominated-write:publish"},
+    "R4": {"unleased-retention:cleanup:remove_image"},
+    "R5": {"stale-holdings:LayerStore.remove_tag",
+           "unlocked-holdings:LayerStore.note_holding"},
+}
+
+
+def fixture_cfg(name: str) -> AnalysisConfig:
+    root = os.path.join(FIXTURES, name)
+    tests = os.path.join(root, "tests")
+    chaos = os.path.join(root, "chaos.py")
+    return AnalysisConfig(
+        src_root=os.path.join(root, "src"),
+        display_root=root,
+        tests_root=tests if os.path.isdir(tests) else None,
+        chaos_path=chaos if os.path.exists(chaos) else None,
+    )
+
+
+def run_rule(name: str, rule: str):
+    return run_analysis(fixture_cfg(name), rules=(rule,))
+
+
+def test_rule_registry_complete():
+    assert sorted(RULES) == ["R1", "R2", "R3", "R4", "R5"]
+    for rule in RULES.values():
+        assert rule.contract and rule.motivation and rule.severity
+
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED_ANCHORS))
+def test_rule_flags_violating_fixture(rule):
+    findings = run_rule(f"{rule.lower()}_bad", rule)
+    anchors = {f.anchor for f in findings}
+    for want in EXPECTED_ANCHORS[rule]:
+        assert any(a == want or a.startswith(want + ":") for a in anchors), \
+            f"{rule} missed {want!r}; got {sorted(anchors)}"
+    for got in anchors:
+        assert any(got == w or got.startswith(w + ":")
+                   for w in EXPECTED_ANCHORS[rule]), \
+            f"{rule} over-reported {got!r}"
+    assert all(f.rule == rule for f in findings)
+
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED_ANCHORS))
+def test_rule_passes_clean_fixture(rule):
+    findings = run_rule(f"{rule.lower()}_clean", rule)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_fingerprints_anchor_not_line():
+    """Suppressions must survive unrelated line drift: the fingerprint is
+    a function of (rule, path, anchor) only."""
+    a = run_rule("r2_bad", "R2")
+    assert len(a) == 1
+    f = a[0]
+    clone = type(f)(f.rule, f.severity, f.path, f.line + 40, f.anchor,
+                    "different message")
+    assert clone.fingerprint == f.fingerprint
+
+
+def test_self_scan_matches_committed_baseline():
+    """The acceptance gate itself, in-process: a full 5-rule run over
+    src/repro must produce no finding that is not a reasoned suppression
+    in the committed baseline (and no stale/unreasoned entries)."""
+    cfg = AnalysisConfig.for_repo()
+    findings = run_analysis(cfg)
+    baseline = load_baseline(cfg.baseline_path)
+    new, _suppressed, stale, unreasoned = diff(findings, baseline)
+    assert new == [], [f.render() for f in new]
+    assert stale == [] and unreasoned == []
+
+
+def test_repo_fault_point_coverage_is_closed():
+    """R1 over the real tree: every fault_point has chaos + test coverage
+    and no live spec is dead — the only tolerated findings are the two
+    suppressed synthetic points of the nested-injector test. Deleting a
+    chaos seam or a fault point breaks this (and CI) immediately."""
+    cfg = AnalysisConfig.for_repo()
+    findings = run_analysis(cfg, rules=("R1",))
+    anchors = {f.anchor for f in findings}
+    assert anchors <= {"dead-spec:x", "dead-spec:y"}, sorted(anchors)
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT)
+
+
+def test_cli_check_fails_on_violating_tree(tmp_path):
+    out_json = str(tmp_path / "findings.json")
+    r = _cli("--root", os.path.join(FIXTURES, "r2_bad"), "--rules", "R2",
+             "--check", "--json", out_json)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "NEW" in r.stdout and "swallow:pull" in r.stdout
+    report = json.load(open(out_json))
+    assert report["new"] and report["findings"]
+
+
+def test_cli_check_passes_clean_tree_and_repo():
+    r = _cli("--root", os.path.join(FIXTURES, "r2_clean"), "--rules",
+             "R2", "--check")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "check: clean" in r.stdout
+    full = _cli("--check")
+    assert full.returncode == 0, full.stdout + full.stderr
+    assert "check: clean" in full.stdout
+
+
+def test_cli_explain_every_rule():
+    for rule_id in RULES:
+        r = _cli("--explain", rule_id)
+        assert r.returncode == 0
+        assert "CONTRACT" in r.stdout and "MOTIVATING BUG" in r.stdout
+    assert _cli("--explain", "R9").returncode == 2

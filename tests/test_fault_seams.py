@@ -1,0 +1,277 @@
+"""Every protocol fault point, exercised by name: the literal seam table
+below is pinned (by equality) to ``ft.chaos.SEAMS``, and each seam plus
+the scenario-specific points (``relay.fan``, ``store.commit``,
+``bundle.fetch``, the source-side ``store.read_blob``) is driven to
+convergence here — so the analyzer's R1 coverage contract (every
+``fault_point`` in src appears in the chaos matrix AND in a test) is
+backed by real, converging injections rather than string-dropping."""
+import numpy as np
+import pytest
+
+from repro.core import (Instruction, LayerStore, RelayNode,
+                        inject_payload_update, push_delta,
+                        replicate_fanout)
+from repro.ft import CrashInjected, FaultSpec, RetryPolicy, inject
+from repro.ft.chaos import SEAMS
+
+INS = [
+    Instruction("FROM", "base", "config"),
+    Instruction("COPY", "src", "content"),
+    Instruction("RUN", "deps", "content"),
+    Instruction("CMD", "run", "config"),
+]
+
+#: literal duplicate of ``ft.chaos.SEAMS`` — kept as literals on purpose:
+#: R1 requires each point name to occur in the tests verbatim, and
+#: ``test_seam_table_matches_chaos`` fails the build if this copy drifts
+SEAM_CASES = [
+    ("wire.negotiate", "dst"),
+    ("wire.probe_blobs", "dst"),
+    ("wire.receive_layer", "dst"),
+    ("wire.receive_blob", "dst"),
+    ("wire.commit", "dst"),
+    ("store.read_blob", "src"),
+    ("store.commit", "dst"),
+]
+
+FAST = dict(max_attempts=4, base_delay_s=0.001, max_delay_s=0.01)
+
+
+def mk(tmp_path, name):
+    return LayerStore(str(tmp_path / name), chunk_bytes=512)
+
+
+def make_payloads(rng):
+    return {
+        "src": {"a": rng.standard_normal(1000).astype(np.float32),
+                "b": rng.standard_normal(500).astype(np.float32)},
+        "deps": {"lib": rng.standard_normal(4000).astype(np.float32)},
+    }
+
+
+def build_v1(store, payloads):
+    store.build_image("app", "v1", INS,
+                      {k: (lambda v=v: v) for k, v in payloads.items()})
+
+
+def inject_v2(store, payloads):
+    src2 = {k: v.copy() for k, v in payloads["src"].items()}
+    src2["b"][3] = 42.0
+    inject_payload_update(store, "app", "v1", "v2", {"src": src2},
+                          providers={"deps": lambda: payloads["deps"]})
+
+
+def converged(src, dst):
+    assert dst.verify_image("app", "v2", deep=True) == []
+    m_src, _ = src.read_image("app", "v2")
+    m_dst, _ = dst.read_image("app", "v2")
+    assert m_src.layer_ids == m_dst.layer_ids
+
+
+def test_seam_table_matches_chaos():
+    """The literal seam list above IS the chaos rotation table — a seam
+    added to one without the other fails here before R1 ever runs."""
+    assert tuple(SEAM_CASES) == SEAMS
+
+
+@pytest.mark.parametrize("point,side", SEAM_CASES,
+                         ids=[p for p, _ in SEAM_CASES])
+def test_drop_at_each_seam_converges(tmp_path, rng, point, side):
+    """One dropped hit at every protocol seam — negotiate, probe, layer
+    and blob receive, remote commit, the source's own disk read, the
+    store commit point — must be converged by the in-run retry."""
+    src, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(src, payloads)
+    push_delta(src, dst, "app", "v1")
+    inject_v2(src, payloads)
+    match = src.root if side == "src" else dst.root
+    policy = RetryPolicy(seed=0, **FAST)
+    with inject(0, FaultSpec(point=point, mode="drop", match=match,
+                             times=1)) as inj:
+        push_delta(src, dst, "app", "v2", retry=policy)
+    assert inj.fired() >= 1, f"{point} never fired — seam wiring broken?"
+    converged(src, dst)
+
+
+def test_source_read_failure_fails_takers_not_fan(tmp_path, rng):
+    """The ship() isolation contract: a source-side store.read_blob drop
+    fails only that blob's takers — the healthy replicas commit on the
+    first pass and the retry converges the rest. Before this seam was
+    guarded, one bad source read crashed the whole fan un-retried."""
+    src, r0, r1, r2 = (mk(tmp_path, n) for n in ("src", "r0", "r1", "r2"))
+    payloads = make_payloads(rng)
+    build_v1(src, payloads)
+    replicate_fanout(src, [r0, r1, r2], "app", "v1")
+    inject_v2(src, payloads)
+    policy = RetryPolicy(seed=1, **FAST)
+    with inject(1, FaultSpec(point="store.read_blob", mode="drop",
+                             match=src.root, times=1)) as inj:
+        fan = replicate_fanout(src, [r0, r1, r2], "app", "v2",
+                               retry=policy)
+    assert inj.fired() >= 1
+    assert fan.n_ok == 3, "retry did not converge the failed takers"
+    for d in (r0, r1, r2):
+        converged(src, d)
+
+
+def test_source_crash_propagates_and_restart_converges(tmp_path, rng):
+    """CrashInjected at the source read is the PUSHER dying — it must
+    escape (never be folded into per-replica isolation) and the
+    restarted pusher must converge."""
+    src, dst = mk(tmp_path, "src"), mk(tmp_path, "dst")
+    payloads = make_payloads(rng)
+    build_v1(src, payloads)
+    push_delta(src, dst, "app", "v1")
+    inject_v2(src, payloads)
+    with inject(2, FaultSpec(point="store.read_blob", mode="crash",
+                             match=src.root, times=1)):
+        with pytest.raises(CrashInjected):
+            push_delta(src, dst, "app", "v2",
+                       retry=RetryPolicy(seed=2, **FAST))
+        push_delta(src, dst, "app", "v2")    # the restarted pusher
+    converged(src, dst)
+
+
+def test_bundle_fetch_drop_falls_back_to_remote(tmp_path, rng):
+    """bundle.fetch dropped for every passive file: the follower must
+    detect the unreachable registry and fall back to the smart remote
+    pull, converging in the same poll."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    from repro.core import PassiveRegistry
+    from repro.serve import CheckpointFollower
+    reg = PassiveRegistry(str(tmp_path / "registry"))
+    mgr = CheckpointManager(
+        str(tmp_path / "train"), "t",
+        CheckpointPolicy(async_write=False, chunk_bytes=512, keep=0),
+        registry=reg)
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    mgr.save(0, params, {"m": np.zeros(8, np.float32)})
+    local = mk(tmp_path, "local")
+    follower = CheckpointFollower(mgr.store, local, keep=3,
+                                  retry=RetryPolicy(seed=4, **FAST),
+                                  registry=reg)
+    with inject(4, FaultSpec(point="bundle.fetch", mode="drop",
+                             match=reg.root, times=None)) as inj:
+        upd = follower.poll()
+    assert inj.fired("bundle.fetch") >= 1
+    assert upd is not None and upd.step == 0
+    assert local.verify_image(mgr.image, "step-00000000", deep=True) == []
+
+
+@pytest.mark.parametrize("mode", ["drop", "crash"])
+def test_relay_fan_fault_converges_via_retry(tmp_path, rng, mode):
+    """relay.fan struck at the mid tier: the fan attempt dies, the
+    outer retry pass re-fans, and both edge children still converge
+    bit-identically."""
+    src, mid, e0, e1 = (mk(tmp_path, n) for n in ("src", "mid", "e0",
+                                                  "e1"))
+    payloads = make_payloads(rng)
+    build_v1(src, payloads)
+    policy = RetryPolicy(seed=3, **FAST)
+    relay = RelayNode(mid, children=[e0, e1], retry=policy)
+    replicate_fanout(src, [relay], "app", "v1")
+    inject_v2(src, payloads)
+    with inject(3, FaultSpec(point="relay.fan", mode=mode,
+                             match=mid.root, times=1)) as inj:
+        fan = replicate_fanout(src, [relay], "app", "v2", retry=policy)
+    assert inj.fired("relay.fan") == 1
+    rep = fan.replicas[0]
+    assert rep.ok, f"relay tier failed: {rep.error}"
+    assert rep.children is not None and rep.children.n_ok == 2
+    for d in (mid, e0, e1):
+        converged(src, d)
+
+def test_follower_pull_key_names_the_image(tmp_path, rng):
+    """The follower.pull key is <local.root>:<image>:<tag> — a spec
+    matching ':alpha:' must strike ONLY the alpha follower. Before the
+    image joined the key, two tenants sharing a host were
+    indistinguishable to the injector and this match never fired."""
+    from repro.serve import CheckpointFollower
+    remote = mk(tmp_path, "remote")
+    state = {"w": rng.standard_normal(600).astype(np.float32)}
+    ins = [Instruction("FROM", "arch", "config"),
+           Instruction("COPY", "state", "content")]
+    for image in ("alpha", "beta"):
+        remote.build_image(image, "step-00000001", ins,
+                           {"state": lambda: state})
+    host = mk(tmp_path, "host")          # one shared serving store
+    fol_a = CheckpointFollower(remote, host, image="alpha", keep=3)
+    fol_b = CheckpointFollower(remote, host, image="beta", keep=3)
+    with inject(0, FaultSpec(point="follower.pull", mode="drop",
+                             match=":alpha:", times=None)) as inj:
+        upd = fol_b.poll()               # beta is untouched by the spec
+        assert upd is not None and upd.step == 1
+        with pytest.raises(ConnectionError):
+            fol_a.poll()
+    assert inj.fired("follower.pull") == 1
+    assert fol_a.poll().step == 1        # next tick converges alpha
+    assert host.verify_image("alpha", "step-00000001", deep=True) == []
+
+
+def test_crash_during_incremental_save_surfaces(tmp_path, rng):
+    """CrashInjected inside the batched incremental transaction is the
+    SAVER dying — it must escape save(), never be misread as 'structure
+    changed' and silently re-run as a full rebuild (which would mark the
+    kill-matrix cell green without any process death)."""
+    from repro.ckpt import CheckpointManager, CheckpointPolicy
+    mgr = CheckpointManager(
+        str(tmp_path / "train"), "t",
+        CheckpointPolicy(async_write=False, chunk_bytes=512))
+    params = {"w": rng.standard_normal(600).astype(np.float32)}
+    opt = {"m": np.zeros(8, np.float32)}
+    mgr.save(0, params, opt)
+    params2 = dict(params, w=params["w"] + 1.0)
+    with inject(5, FaultSpec(point="store.commit", mode="crash",
+                             match=mgr.store.root, times=1)) as inj:
+        with pytest.raises(CrashInjected):
+            mgr.save(1, params2, opt)
+        assert mgr.latest_step() == 0    # the batch never committed
+        mgr.save(1, params2, opt)        # the restarted saver
+    assert inj.fired("store.commit") == 1
+    assert mgr.latest_step() == 1
+    assert mgr.store.verify_image(mgr.image, "step-00000001",
+                                  deep=True) == []
+
+
+def test_crash_during_inline_repair_surfaces_from_poll(tmp_path, rng):
+    """CrashInjected while the verify gate heals a rotted revision is the
+    FOLLOWER dying mid-repair — poll() must raise it (a supervisor
+    restarts the replica), not log 'repair failed' and keep serving; the
+    restarted follower's next poll re-repairs and converges."""
+    from repro.serve import CheckpointFollower
+    remote, local = mk(tmp_path, "remote"), mk(tmp_path, "local")
+    state = {"params/w": rng.standard_normal(1000).astype(np.float32),
+             "opt/__step__": np.asarray([1], np.int32)}
+    ins = [Instruction("FROM", "arch", "config"),
+           Instruction("COPY", "state", "content")]
+    remote.build_image("ckpt", "step-00000001", ins,
+                       {"state": lambda: state})
+    follower = CheckpointFollower(remote, local, keep=3)
+    assert follower.poll().step == 1     # warm base, no faults
+    state2 = {k: v.copy() for k, v in state.items()}
+    state2["params/w"][7] = 42.0
+    state2["opt/__step__"][0] = 2
+    inject_payload_update(remote, "ckpt", "step-00000001",
+                          "step-00000002", {"state": state2})
+    specs = [FaultSpec(point="store.write_blob", mode="bitrot",
+                       match=local.root, times=1),
+             FaultSpec(point="repair.pull", mode="crash",
+                       match=local.root, times=1)]
+    with inject(6, *specs) as inj:
+        with pytest.raises(CrashInjected):
+            follower.poll()              # rot detected, repair crashes
+        # times=1 is per (point, key): every damaged blob's first repair
+        # pull dies once, so keep restarting the follower (supervisor
+        # semantics) until one whole poll survives
+        upd = None
+        for _ in range(8):
+            try:
+                upd = follower.poll()
+            except CrashInjected:
+                continue
+            break
+    assert inj.fired("store.write_blob") >= 1
+    assert inj.fired("repair.pull") >= 1
+    assert upd is not None and upd.step == 2
+    assert local.verify_image("ckpt", "step-00000002", deep=True) == []
